@@ -1,0 +1,49 @@
+"""Paper Fig. 2: posting entries traversed, STR / MB, as a function of τ.
+
+Claim: the ratio is < 1 (STR does less index work) and decreases toward
+~0.65 as the horizon grows (MB inherently tests up-to-2τ-apart pairs)."""
+
+from __future__ import annotations
+
+import math
+from typing import List
+
+from repro.data.synth import synthetic_stream
+
+from .common import BENCH_SPECS, Row, run_config
+
+THETA = 0.7
+
+
+def run(fast: bool = True) -> List[Row]:
+    ds = "rcv1"
+    items = synthetic_stream(BENCH_SPECS[ds], seed=2)
+    rows: List[Row] = []
+    lams = (1.0, 0.3, 0.1, 0.03, 0.01) if not fast else (1.0, 0.1, 0.01)
+    for lam in lams:
+        tau = math.log(1 / THETA) / lam
+        _, c_mb, _ = run_config(items, "MB", "L2", THETA, lam)
+        _, c_str, _ = run_config(items, "STR", "L2", THETA, lam)
+        if c_mb.entries_traversed == 0:
+            # degenerate horizon (window holds <1 item): both do no index
+            # work — the paper's "ratio tends to one for small τ" endpoint
+            ratio = 1.0 if c_str.entries_traversed == 0 else float("inf")
+        else:
+            ratio = c_str.entries_traversed / c_mb.entries_traversed
+        rows.append(Row(f"fig2/{ds}/tau={tau:.2f}/str_over_mb", ratio,
+                        f"str={c_str.entries_traversed} mb={c_mb.entries_traversed}"))
+    return rows
+
+
+def check(rows: List[Row]) -> List[str]:
+    problems = []
+    vals = [(float(r.name.split("tau=")[1].split("/")[0]), r.value)
+            for r in rows]
+    vals.sort()
+    for tau, v in vals:
+        if not v <= 1.05:
+            problems.append(f"fig2: ratio {v:.3f} > 1 at tau={tau}")
+    # largest horizon should show a clear advantage
+    if vals and vals[-1][1] > 0.9:
+        problems.append(f"fig2: no STR advantage at large tau ({vals[-1][1]:.3f})")
+    return problems

@@ -1,0 +1,51 @@
+"""Paper Figs. 3–4: wall time, MB vs STR, as a function of θ (per λ).
+
+Claims reproduced qualitatively: STR beats MB on the sparse sequential
+dataset (RCV1-like), most clearly at low θ; on the dense dataset
+(WebSpam-like) MB is competitive or ahead at large λ — density makes STR's
+per-item lazy pruning of many long posting lists expensive."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.data.synth import synthetic_stream
+
+from .common import BENCH_SPECS, Row, run_config
+
+THETAS = (0.5, 0.7, 0.9)
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    datasets = ("rcv1", "webspam")
+    lams = (0.03, 0.3) if fast else (0.01, 0.1, 1.0)
+    for ds in datasets:
+        items = synthetic_stream(BENCH_SPECS[ds], seed=3)
+        for lam in lams:
+            for th in THETAS:
+                for fw in ("MB", "STR"):
+                    secs, _, n = run_config(items, fw, "L2", th, lam,
+                                            timeout_s=60.0)
+                    rows.append(
+                        Row(f"fig34/{ds}/lam={lam}/theta={th}/{fw}/time_s",
+                            -1.0 if secs is None else secs, f"pairs={n}")
+                    )
+    return rows
+
+
+def check(rows: List[Row]) -> List[str]:
+    problems = []
+    by = {r.name: r.value for r in rows}
+    # RCV1-like, smallest λ (largest τ), low θ: STR should win (Fig. 3)
+    for th in (0.5,):
+        for lam in (0.03, 0.01):
+            mb = by.get(f"fig34/rcv1/lam={lam}/theta={th}/MB/time_s")
+            st = by.get(f"fig34/rcv1/lam={lam}/theta={th}/STR/time_s")
+            if mb is not None and st is not None and mb > 0:
+                if st > mb * 1.5:
+                    problems.append(
+                        f"fig34: STR {st:.2f}s ≫ MB {mb:.2f}s on rcv1 "
+                        f"(θ={th}, λ={lam})"
+                    )
+    return problems

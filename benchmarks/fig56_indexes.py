@@ -1,0 +1,56 @@
+"""Paper Figs. 5–6: STR with different indexes — wall time (Fig. 5) and
+entries traversed (Fig. 6) as functions of θ.
+
+Claims: L2 is (almost always) the fastest; INV competitive only at short
+horizons; L2AP's re-indexing makes it traverse *more* entries than L2 as
+the horizon shrinks (it loses the ordered-list truncation fast path)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.data.synth import synthetic_stream
+
+from .common import BENCH_SPECS, Row, run_config
+
+THETAS = (0.5, 0.7, 0.9)
+INDEXES = ("INV", "L2AP", "L2")
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    ds = "rcv1"
+    items = synthetic_stream(BENCH_SPECS[ds], seed=4)
+    lams = (0.03,) if fast else (0.01, 0.1, 1.0)
+    for lam in lams:
+        for th in THETAS:
+            for idx in INDEXES:
+                secs, c, _ = run_config(items, "STR", idx, th, lam,
+                                        timeout_s=60.0)
+                rows.append(
+                    Row(f"fig5/{ds}/lam={lam}/theta={th}/{idx}/time_s",
+                        -1.0 if secs is None else secs)
+                )
+                rows.append(
+                    Row(f"fig6/{ds}/lam={lam}/theta={th}/{idx}/entries",
+                        float(c.entries_traversed),
+                        f"reindex_entries={c.reindex_entries}")
+                )
+    return rows
+
+
+def check(rows: List[Row]) -> List[str]:
+    problems = []
+    by = {r.name: r.value for r in rows}
+    for name, v in list(by.items()):
+        if "/L2/entries" in name:
+            inv = by.get(name.replace("/L2/", "/INV/"))
+            if inv is not None and v > inv * 1.02:
+                problems.append(f"{name}: L2 traverses more than INV")
+    # L2 should never lose badly to L2AP in time (paper: L2 ≤ L2AP)
+    for name, v in list(by.items()):
+        if "/L2/time_s" in name and v > 0:
+            l2ap = by.get(name.replace("/L2/", "/L2AP/"))
+            if l2ap is not None and l2ap > 0 and v > l2ap * 2.0:
+                problems.append(f"{name}: L2 {v:.2f}s ≫ L2AP {l2ap:.2f}s")
+    return problems

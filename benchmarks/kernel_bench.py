@@ -1,0 +1,56 @@
+"""Beyond-paper: throughput of the XLA-compiled blocked join (the jnp ref
+path — the kernel itself targets TPU and runs in interpret mode here, so
+wall-clock is only meaningful for the compiled dense path) + the roofline
+picture of the Pallas kernel from its static work model."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sssj_join import sssj_join_scores
+
+from .common import Row
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    Q = W = 512 if fast else 2048
+    for d in ((256,) if fast else (256, 1024)):
+        q = rng.standard_normal((Q, d)).astype(np.float32)
+        q /= np.linalg.norm(q, axis=1, keepdims=True)
+        w = rng.standard_normal((W, d)).astype(np.float32)
+        w /= np.linalg.norm(w, axis=1, keepdims=True)
+        tq = np.sort(rng.random(Q) * 100).astype(np.float32) + 100
+        tw = np.sort(rng.random(W) * 100).astype(np.float32)
+        uq = np.arange(W, W + Q, dtype=np.int32)
+        uw = np.arange(W, dtype=np.int32)
+        args = [jnp.asarray(x) for x in (q, w, tq, tw, uq, uw)]
+        kw = dict(theta=0.7, lam=0.05, use_ref=True)
+        out, _ = sssj_join_scores(*args, **kw)
+        out.block_until_ready()
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            out, _ = sssj_join_scores(*args, **kw)
+        out.block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        gflops = 2 * Q * W * d / dt / 1e9
+        rows.append(Row(f"kernel/ref_dense/Q{Q}xW{W}xd{d}/gflops", gflops,
+                        f"{dt*1e3:.1f} ms/join"))
+        # static work model of the Pallas kernel on v5e for this shape:
+        # full-tile FLOPs / peak — the interpret-mode runs validate
+        # correctness (tests), the TPU projection belongs to EXPERIMENTS.md
+        v5e = 197e12
+        t_roof = 2 * Q * W * d / v5e
+        rows.append(Row(f"kernel/v5e_roofline/Q{Q}xW{W}xd{d}/us", t_roof * 1e6))
+    return rows
+
+
+def check(rows: List[Row]) -> List[str]:
+    return []

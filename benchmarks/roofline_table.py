@@ -1,0 +1,93 @@
+"""Render the §Roofline table from the dry-run sweep JSONs.
+
+Reads ``results/dryrun/*.json`` (written by ``repro.launch.dryrun --all``)
+and emits the per-(arch × shape × mesh) three-term roofline table as
+markdown — the artifact EXPERIMENTS.md §Roofline embeds."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List, Optional
+
+from .common import Row
+
+_DIR = pathlib.Path("results/dryrun")
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f} s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f} ms"
+    return f"{x*1e6:.0f} µs"
+
+
+def load_records(directory: pathlib.Path = _DIR) -> List[dict]:
+    recs = []
+    for p in sorted(directory.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def render_markdown(recs: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | bound | "
+        "MODEL/HLO | args GiB | temp GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        mesh = "2×16×16" if r.get("multi_pod") else "16×16"
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — | "
+                f"skip | — | — | — |"
+            )
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — | "
+                f"ERROR | — | — | — |"
+            )
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        args = mem.get("argument_size_in_bytes", 0) / 2 ** 30
+        temp = mem.get("temp_size_in_bytes", 0) / 2 ** 30
+        ur = r.get("useful_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {_fmt_s(t['compute_s'])} | {_fmt_s(t['memory_s'])} "
+            f"| {_fmt_s(t['collective_s'])} | {t['dominant']} "
+            f"| {ur:.3f} | {args:.2f} | {temp:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def run(fast: bool = True) -> List[Row]:
+    if not _DIR.exists():
+        return [Row("roofline/available", 0.0, "run repro.launch.dryrun --all")]
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    rows = [Row("roofline/cells_ok", float(len(ok)), f"of {len(recs)}")]
+    out = pathlib.Path("results/roofline_table.md")
+    out.write_text(render_markdown(recs) + "\n")
+    rows.append(Row("roofline/table_written", 1.0, str(out)))
+    for r in ok:
+        t = r["roofline"]
+        mesh = "mp" if r.get("multi_pod") else "sp"
+        rows.append(
+            Row(
+                f"roofline/{r['arch']}/{r['shape']}/{mesh}/bound_s",
+                t["bound_s"], t["dominant"],
+            )
+        )
+    return rows
+
+
+def check(rows: List[Row]) -> List[str]:
+    by = {r.name: r for r in rows}
+    cells = by.get("roofline/cells_ok")
+    if cells is None or cells.value < 1:
+        return ["roofline: no dry-run records — run repro.launch.dryrun --all"]
+    return []

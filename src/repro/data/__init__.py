@@ -1,0 +1,7 @@
+"""Data substrate: synthetic streams, resumable token pipeline, SSSJ dedup."""
+
+from .pipeline import DedupFilter, TokenPipeline  # noqa: F401
+from .synth import (  # noqa: F401
+    DATASET_SPECS, StreamSpec, dense_embedding_stream, planted_duplicates,
+    synthetic_stream,
+)

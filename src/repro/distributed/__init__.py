@@ -1,0 +1,9 @@
+from .sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    axis_ctx,
+    constrain,
+    resolve_pspec,
+    param_shardings,
+    use_rules,
+)

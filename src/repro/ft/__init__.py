@@ -1,0 +1,5 @@
+"""Fault tolerance: checkpointing, health tracking, elastic re-meshing."""
+
+from .checkpoint import restore_checkpoint, save_checkpoint  # noqa: F401
+from .manager import CheckpointManager  # noqa: F401
+from .health import ElasticPlanner, HeartbeatTracker  # noqa: F401

@@ -1,0 +1,140 @@
+"""Atomic, resharding checkpoints with an index manifest.
+
+Layout of one checkpoint::
+
+    <dir>/step_000123/
+        MANIFEST.json       # tree structure, per-leaf file/shape/dtype, meta
+        leaf_00000.npy ...  # one .npy per pytree leaf (host-gathered)
+
+Properties needed at 1000-node scale, scaled to this container:
+
+  * **atomic** — written to ``step_X.tmp`` and ``os.replace``d into place;
+    a crash mid-save never corrupts the latest checkpoint;
+  * **reshard-on-load** — leaves are restored with ``jax.device_put`` against
+    *whatever shardings the new mesh wants*: restoring a 2-pod checkpoint
+    onto 1 pod (elastic shrink) or onto more pods (grow) is the same call;
+  * **self-describing** — MANIFEST carries the flattened key paths, so a
+    checkpoint can be inspected / partially loaded without the model code;
+  * **data-pipeline state included** — exact-resume without sample loss.
+
+(A production deployment would use a parallel-IO array store; the format
+here keeps the *semantics* — atomicity, manifest, resharding — with plain
+numpy files.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "list_checkpoints"]
+
+_MANIFEST = "MANIFEST.json"
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save_checkpoint(
+    directory: str | os.PathLike,
+    step: int,
+    state: Any,
+    extra: Optional[Dict[str, Any]] = None,
+) -> pathlib.Path:
+    """Write ``state`` (any pytree) atomically.  Returns the final path."""
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = pathlib.Path(
+        tempfile.mkdtemp(prefix=f".step_{step:08d}.tmp", dir=directory)
+    )
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    index = []
+    for i, (path, leaf) in enumerate(leaves):
+        fname = f"leaf_{i:05d}.npy"
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / fname, arr, allow_pickle=False)
+        index.append(
+            {
+                "key": _keystr(path),
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        )
+    manifest = {"step": step, "leaves": index, "extra": extra or {}}
+    with open(tmp / _MANIFEST, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def list_checkpoints(directory: str | os.PathLike):
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return []
+    out = []
+    for p in sorted(directory.iterdir()):
+        if p.is_dir() and p.name.startswith("step_") and (p / _MANIFEST).exists():
+            out.append(p)
+    return out
+
+
+def restore_checkpoint(
+    path: str | os.PathLike,
+    like: Any,
+    shardings: Optional[Any] = None,
+):
+    """Restore into the structure of ``like``; reshard to ``shardings``.
+
+    ``like`` supplies the pytree structure (arrays or ShapeDtypeStructs).
+    ``shardings`` — optional matching pytree of ``jax.sharding.Sharding`` —
+    places each leaf directly onto the (possibly different) mesh.
+    Returns ``(state, extra, step)``.
+    """
+    path = pathlib.Path(path)
+    with open(path / _MANIFEST) as f:
+        manifest = json.load(f)
+    paths_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    if len(manifest["leaves"]) != len(paths_like):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"target structure has {len(paths_like)}"
+        )
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding)
+        )[0]
+    out = []
+    for i, (kpath, leaf) in enumerate(paths_like):
+        key = _keystr(kpath)
+        entry = by_key.get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = np.load(path / entry["file"], allow_pickle=False)
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected {want_shape}"
+            )
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.device_put(arr))
+    state = jax.tree_util.tree_unflatten(treedef, out)
+    return state, manifest.get("extra", {}), manifest["step"]

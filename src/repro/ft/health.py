@@ -1,0 +1,121 @@
+"""Cluster health: heartbeats, straggler detection, elastic re-mesh plans.
+
+At 1000+ nodes the failure model is: hosts die (no heartbeat), hosts
+straggle (heartbeats arrive but step progress lags), and capacity changes
+(nodes added back after repair).  The tracker is pure logic over
+(worker, step, time) triples so it is unit-testable without a cluster;
+the training loop feeds it and acts on its verdicts:
+
+  * ``dead()``      → trigger checkpoint-restore on a re-planned mesh
+  * ``stragglers()``→ exclude from the next re-plan (p99-lag rule)
+  * ``ElasticPlanner.plan()`` → largest viable (pod, data, model) mesh from
+    the surviving host set; restore reshards onto it (ft/checkpoint.py)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["HeartbeatTracker", "ElasticPlanner", "MeshPlan"]
+
+
+@dataclasses.dataclass
+class _Beat:
+    step: int
+    t: float
+
+
+class HeartbeatTracker:
+    """Tracks (worker → latest step/time); classifies dead and stragglers."""
+
+    def __init__(self, dead_after_s: float = 60.0, lag_factor: float = 3.0):
+        self.dead_after_s = dead_after_s
+        self.lag_factor = lag_factor
+        self._beats: Dict[str, _Beat] = {}
+
+    def record(self, worker: str, step: int, t: float) -> None:
+        b = self._beats.get(worker)
+        if b is None or step >= b.step:
+            self._beats[worker] = _Beat(step, t)
+
+    def workers(self) -> List[str]:
+        return sorted(self._beats)
+
+    def dead(self, now: float) -> List[str]:
+        return sorted(
+            w for w, b in self._beats.items() if now - b.t > self.dead_after_s
+        )
+
+    def stragglers(self, now: float) -> List[str]:
+        """Workers alive but lagging the fleet's step progress.
+
+        Rule: a worker is a straggler if its step lag behind the p50 step
+        exceeds ``lag_factor ×`` the p50→p99 spread (robust to the fleet
+        being globally slow), with a floor of 2 steps.
+        """
+        alive = {
+            w: b for w, b in self._beats.items()
+            if now - b.t <= self.dead_after_s
+        }
+        if len(alive) < 4:
+            return []
+        steps = np.array([b.step for b in alive.values()], dtype=np.float64)
+        p50 = np.percentile(steps, 50)
+        p99 = np.percentile(steps, 99)
+        spread = max(p99 - p50, 1.0)
+        thresh = max(self.lag_factor * spread, 2.0)
+        return sorted(w for w, b in alive.items() if (p50 - b.step) > thresh)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    hosts_used: int
+    hosts_dropped: int
+
+
+class ElasticPlanner:
+    """Choose the largest viable production mesh for a surviving host set.
+
+    The production topology is pods of 64 hosts (256 chips at 4 chips/host,
+    mesh tile (data=16, model=16)).  Elastic policy: keep the model axis at
+    16 (TP must match the compiled program's expectations), scale the data
+    and pod axes down/up to the largest whole tile count.
+    """
+
+    def __init__(self, chips_per_host: int = 4, model_axis: int = 16,
+                 data_axis: int = 16):
+        self.chips_per_host = chips_per_host
+        self.model_axis = model_axis
+        self.data_axis = data_axis
+        self.chips_per_pod = model_axis * data_axis
+
+    def plan(self, alive_hosts: int) -> Optional[MeshPlan]:
+        chips = alive_hosts * self.chips_per_host
+        pods = chips // self.chips_per_pod
+        if pods < 1:
+            # degrade: shrink the data axis while keeping model=16
+            for data in (8, 4, 2, 1):
+                need = self.model_axis * data
+                if chips >= need:
+                    used = need // self.chips_per_host
+                    return MeshPlan(
+                        (data, self.model_axis), ("data", "model"),
+                        hosts_used=used, hosts_dropped=alive_hosts - used,
+                    )
+            return None
+        if pods == 1:
+            used = self.chips_per_pod // self.chips_per_host
+            return MeshPlan(
+                (self.data_axis, self.model_axis), ("data", "model"),
+                hosts_used=used, hosts_dropped=alive_hosts - used,
+            )
+        used = pods * self.chips_per_pod // self.chips_per_host
+        return MeshPlan(
+            (pods, self.data_axis, self.model_axis), ("pod", "data", "model"),
+            hosts_used=used, hosts_dropped=alive_hosts - used,
+        )

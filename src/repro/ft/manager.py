@@ -1,0 +1,84 @@
+"""Checkpoint manager: retention policy + async (off-thread) saves.
+
+The device→host gather happens synchronously (so the saved state is the
+state at the save point, not a torn snapshot); only the disk IO runs on the
+background thread — the same split a real multi-host async checkpointer
+makes.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from .checkpoint import list_checkpoints, restore_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager"]
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        async_save: bool = True,
+    ) -> None:
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None) -> None:
+        """Snapshot to host, then write (async if configured)."""
+        self.wait()  # one in-flight save at a time
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def _write():
+            try:
+                save_checkpoint(self.directory, step, host_state, extra)
+                self._retain()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+            self._raise_if_failed()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from err
+
+    # ------------------------------------------------------------------ #
+    def latest_path(self) -> Optional[pathlib.Path]:
+        cps = list_checkpoints(self.directory)
+        return cps[-1] if cps else None
+
+    def restore_latest(self, like: Any, shardings: Optional[Any] = None):
+        """Returns (state, extra, step) or None if no checkpoint exists."""
+        self.wait()
+        path = self.latest_path()
+        if path is None:
+            return None
+        return restore_checkpoint(path, like, shardings)
+
+    def _retain(self) -> None:
+        cps = list_checkpoints(self.directory)
+        for p in cps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the performance-critical compute of the system.
+
+Each kernel lives in its own subpackage with the standard layout:
+
+  * ``kernel.py`` — ``pl.pallas_call`` body + explicit BlockSpec VMEM tiling
+  * ``ops.py``    — jit'd public wrapper (padding, bound precomputation)
+  * ``ref.py``    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels target TPU; on this CPU-only container they are validated in
+``interpret=True`` mode (the wrappers auto-detect the backend).
+"""
+
+from .sssj_join.ops import sssj_join_scores  # noqa: F401
+from .flash_attention.ops import flash_attention  # noqa: F401

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: causal flash attention (prefill path).
+
+Canonical TPU formulation: grid ``(batch, q_heads, n_q_blocks, n_kv_blocks)``
+with the kv-block dimension innermost (sequential on TPU), carrying the
+online-softmax state — running max ``m``, normalizer ``l`` and the output
+accumulator — in VMEM scratch across kv steps.  GQA is handled in the
+BlockSpec index maps (query head ``h`` reads kv head ``h // group``), so no
+materialized K/V repetition is needed.
+
+Causality is enforced at two granularities:
+
+  * whole kv blocks strictly above the diagonal are skipped via ``pl.when``
+    (no MXU work — the analogue of the SSSJ kernel's dead-tile skip);
+  * the diagonal block applies an elementwise mask.
+
+The kernel is used for TPU serving prefill; training uses the XLA path
+(this kernel is forward-only).  Validated in interpret mode against
+``ref.py`` over shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel_call"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,            # inputs
+    o_ref,                          # output
+    acc_ref, m_ref, l_ref,          # VMEM scratch
+    *, sm_scale: float, block_q: int, block_k: int, n_kv_blocks: int, causal: bool,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    f32 = jnp.float32
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Skip kv blocks strictly in the causal future of this q block: program
+    # ids are traced, so the skip is a dynamic pl.when (no MXU work done).
+    should_run = jnp.asarray(True) if not causal else (
+        ik * block_k <= iq * block_q + block_q - 1
+    )
+
+    @pl.when(should_run)
+    def _step():
+        q = q_ref[0, 0].astype(f32) * sm_scale          # (bq, dh)
+        k = k_ref[0, 0].astype(f32)                     # (bk, dh)
+        v = v_ref[0, 0].astype(f32)                     # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=f32,
+        )                                               # (bq, bk)
+        if causal:
+            rows = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0
+            )
+            cols = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1
+            )
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        m_prev = m_ref[:, 0]                            # (bq,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)                 # (bq,)
+        p = jnp.exp(s - m_cur[:, None])                 # (bq, bk)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=f32,
+        )
+        m_ref[:, 0] = m_cur
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel_call(
+    q: jax.Array,   # (B, H, Sq, Dh)
+    k: jax.Array,   # (B, Hkv, Sk, Dh)
+    v: jax.Array,   # (B, Hkv, Sk, Dh)
+    *,
+    sm_scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    B, H, Sq, Dh = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = H // Hkv
+    n_q = Sq // block_q
+    n_k = Sk // block_k
+    grid = (B, H, n_q, n_k)
+
+    kernel = functools.partial(
+        _kernel,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=n_k,
+        causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, Dh), lambda b, h, i, j, g=group: (b, h // g, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, Dh), lambda b, h, i, j, g=group: (b, h // g, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention (GQA-aware, causal)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, sm_scale: float, causal: bool):
+    """Naive attention.  q: (B, H, Sq, Dh); k, v: (B, Hkv, Sk, Dh)."""
+    B, H, Sq, Dh = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = H // Hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * sm_scale
+    if causal:
+        rows = jnp.arange(Sq)[:, None]
+        cols = jnp.arange(Sk)[None, :]
+        s = jnp.where(rows >= cols, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

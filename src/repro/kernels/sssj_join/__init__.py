@@ -1,0 +1,2 @@
+from .ops import sssj_join_scores, suffix_chunk_norms, NEG_UID  # noqa: F401
+from .ref import sssj_join_ref  # noqa: F401

@@ -1,0 +1,130 @@
+"""Public jit'd wrapper for the SSSJ blocked-join kernel.
+
+Handles padding to block multiples, suffix-norm precomputation (the ℓ2
+pruning bounds), backend auto-detection (interpret mode off-TPU), and
+unpadding of the outputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import NEG_UID, sssj_join_kernel_call
+from .ref import sssj_join_ref
+
+__all__ = ["sssj_join_scores", "suffix_chunk_norms", "NEG_UID"]
+
+
+def suffix_chunk_norms(x: jax.Array, chunk_d: int) -> jax.Array:
+    """``out[i, k] = ‖x_i restricted to chunks > k‖`` (f32, (n, n_chunks)).
+
+    This is the per-vector data the paper's L2 index stores in its posting
+    entries (prefix magnitudes ‖x'_j‖), reorganized for chunked evaluation:
+    after the kernel has accumulated chunks 0..k, the unseen remainder of
+    the dot product is bounded by ``out_q[i, k] * out_w[j, k]``.
+    """
+    n, d = x.shape
+    n_chunks = d // chunk_d
+    sq = (x.astype(jnp.float32) ** 2).reshape(n, n_chunks, chunk_d).sum(-1)
+    # reverse-exclusive cumulative sum over chunks
+    suffix_sq = jnp.flip(jnp.cumsum(jnp.flip(sq, axis=1), axis=1), axis=1)
+    suffix_excl = jnp.concatenate(
+        [suffix_sq[:, 1:], jnp.zeros((n, 1), jnp.float32)], axis=1
+    )
+    return jnp.sqrt(suffix_excl)
+
+
+def _pad_rows(x: jax.Array, mult: int, fill=0):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1), constant_values=fill)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "theta", "lam", "block_q", "block_w", "chunk_d", "interpret", "use_ref"
+    ),
+)
+def sssj_join_scores(
+    q: jax.Array,
+    w: jax.Array,
+    tq: jax.Array,
+    tw: jax.Array,
+    uq: jax.Array,
+    uw: jax.Array,
+    *,
+    theta: float,
+    lam: float,
+    block_q: int = 128,
+    block_w: int = 128,
+    chunk_d: int = 128,
+    interpret: Optional[bool] = None,
+    use_ref: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Blocked time-decayed similarity join.
+
+    Args:
+      q:  (Q, d) query vectors (unit-normalized; f32 or bf16).
+      w:  (W, d) window vectors.
+      tq: (Q,) or (Q, 1) query timestamps.
+      tw: (W,) window timestamps.
+      uq: (Q,) query uids (monotone stream counters).
+      uw: (W,) window uids; negative marks empty ring slots.
+      theta, lam: SSSJ parameters.
+      use_ref: route through the pure-jnp oracle instead of the kernel
+        (used by tests and as the fallback for unaligned tiny inputs).
+
+    Returns:
+      scores: (Q, W) f32 — decayed similarity where ≥ θ (masked by uid
+        order), 0 elsewhere.
+      iters:  (nQ, nW) i32 — d-chunks executed per tile (pruning telemetry);
+        all-`n_chunks` when use_ref.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tq = tq.reshape(-1, 1).astype(jnp.float32)
+    tw = tw.reshape(-1, 1).astype(jnp.float32)
+    uq = uq.reshape(-1, 1).astype(jnp.int32)
+    uw = uw.reshape(-1, 1).astype(jnp.int32)
+
+    Q, d = q.shape
+    W, _ = w.shape
+    if use_ref:
+        scores = sssj_join_ref(q, w, tq, tw, uq, uw, theta=theta, lam=lam)
+        n_chunks = max(d // chunk_d, 1)
+        iters = jnp.full(
+            ((Q + block_q - 1) // block_q, (W + block_w - 1) // block_w),
+            n_chunks,
+            jnp.int32,
+        )
+        return scores, iters
+
+    if d % chunk_d != 0:
+        pad_d = (-d) % chunk_d
+        q = jnp.pad(q, ((0, 0), (0, pad_d)))
+        w = jnp.pad(w, ((0, 0), (0, pad_d)))
+        d += pad_d
+
+    qp = _pad_rows(q, block_q)
+    wp = _pad_rows(w, block_w)
+    tqp = _pad_rows(tq, block_q)
+    twp = _pad_rows(tw, block_w)
+    uqp = _pad_rows(uq, block_q, fill=NEG_UID)
+    uwp = _pad_rows(uw, block_w, fill=NEG_UID)
+    sqq = suffix_chunk_norms(qp, chunk_d)
+    sqw = suffix_chunk_norms(wp, chunk_d)
+
+    scores, iters = sssj_join_kernel_call(
+        qp, wp, tqp, twp, uqp, uwp, sqq, sqw,
+        theta=theta, lam=lam,
+        block_q=block_q, block_w=block_w, chunk_d=chunk_d,
+        interpret=interpret,
+    )
+    return scores[:Q, :W], iters

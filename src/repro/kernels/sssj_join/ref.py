@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the blocked time-decayed join kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["sssj_join_ref"]
+
+
+def sssj_join_ref(q, w, tq, tw, uq, uw, *, theta: float, lam: float):
+    """Dense reference: thresholded decayed scores with uid-order masking.
+
+    Args mirror the kernel: ``q (Q, d)``, ``w (W, d)``, timestamps ``(·, 1)``
+    float, uids ``(·, 1)`` int (negative = empty slot).  Returns the
+    ``(Q, W)`` float32 score matrix: ``dot·exp(-λΔt)`` where that value is
+    ≥ θ and ``uid_q > uid_w ≥ 0``, else 0.
+    """
+    qf = q.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    sims = qf @ wf.T
+    dt = jnp.abs(tq.astype(jnp.float32) - tw.astype(jnp.float32).T)
+    dec = sims * jnp.exp(-lam * dt)
+    order = (uw.T >= 0) & (uq > uw.T)
+    dec = jnp.where(order, dec, 0.0)
+    return jnp.where(dec >= theta, dec, 0.0).astype(jnp.float32)

@@ -1,0 +1,255 @@
+"""Dry-run cell construction: (arch × shape) → step fn + sharded arg specs.
+
+``make_step_and_inputs(cfg, shape, mesh)`` returns ``(fn, args, rules)``
+where every leaf of ``args`` is a ``jax.ShapeDtypeStruct`` carrying its
+``NamedSharding`` — no device memory is ever allocated; the caller does
+``jax.jit(fn, ...).lower(*args).compile()``.
+
+Sharding regimes (logical-axis rule tables):
+
+  * **train / prefill** — batch over (pod, data); TP (heads/ff/vocab/experts)
+    over model; KV-cache sequence over model (needed to fit 32k×B caches).
+  * **decode** — SP-decode: cache kv_seq over model (flash-decode style
+    partial-softmax combining), batch over (pod, data); attention heads
+    replicated (negligible compute at S=1), MLP/MoE/vocab still TP.
+  * **long-context decode** — batch=1 ⇒ batch replicates (divisibility
+    fallback); kv_seq over (pod, data, model) = every chip holds a slice of
+    the 512k cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.sharding import (
+    AxisRules, DEFAULT_RULES, param_shardings, resolve_pspec, use_rules,
+)
+from ..models.lm import (
+    init_lm, init_lm_caches, lm_cache_specs, lm_decode_step, lm_forward, lm_specs,
+)
+from ..optim.adamw import AdamWConfig, init_opt_state, opt_state_specs
+from ..train.step import TrainConfig, build_train_step
+
+__all__ = ["make_step_and_inputs", "rules_for", "abstract_train_state",
+           "abstract_params", "DryRunCell"]
+
+
+TRAIN_RULES = DEFAULT_RULES.override(kv_seq=("model",))
+PREFILL_RULES = DEFAULT_RULES.override(kv_seq=("model",))
+DECODE_RULES = DEFAULT_RULES.override(
+    kv_seq=("model",), heads=None, kv_heads=None,
+)
+LONG_RULES = DEFAULT_RULES.override(
+    kv_seq=("pod", "data", "model"), heads=None, kv_heads=None,
+)
+
+
+def rules_for(shape: ShapeConfig, cfg: Optional[ModelConfig] = None) -> AxisRules:
+    if shape.kind == "train":
+        rules = TRAIN_RULES
+    elif shape.kind == "prefill":
+        rules = PREFILL_RULES
+    elif shape.name == "long_500k":
+        return LONG_RULES
+    else:
+        return DECODE_RULES
+    # Perf iteration T3 (sequence parallelism): archs whose head count does
+    # not divide the model axis (musicgen 24H, deepseek-coder 56H) cannot
+    # TP their attention — heads fall back to replicated, making every
+    # device compute ALL heads over its batch shard (16× the attention
+    # work/traffic of the sharded case).  Mapping the *sequence* axis onto
+    # "model" instead shards attention (and norms/activations) by position:
+    # valid for any head count, costs one KV all-gather per layer.
+    if cfg is not None and cfg.n_heads % 16 != 0 and cfg.block_kind == "transformer":
+        rules = rules.override(seq=("model",), heads=None, kv_heads=None)
+    return rules
+
+
+def _sds(shape, dtype, mesh, pspec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, pspec))
+
+
+def _attach(shapes_tree, spec_tree, mesh: Mesh, rules: AxisRules):
+    """ShapeDtypeStruct tree + logical-spec tree → SDS-with-sharding tree."""
+    is_leaf = lambda s: s is None or (
+        isinstance(s, tuple) and all(isinstance(x, (str, type(None))) for x in s)
+    )
+
+    def one(spec, sds):
+        if spec is None:
+            ps = P()
+        else:
+            ps = resolve_pspec(sds.shape, spec, rules, mesh)
+        return _sds(sds.shape, sds.dtype, mesh, ps)
+
+    return jax.tree.map(one, spec_tree, shapes_tree, is_leaf=is_leaf)
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, rules: AxisRules,
+                    dtype=None):
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.key(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), shapes
+        )
+    return _attach(shapes, lm_specs(cfg), mesh, rules)
+
+
+def abstract_train_state(cfg: ModelConfig, train_cfg: TrainConfig, mesh: Mesh,
+                         rules: AxisRules):
+    p_sds = abstract_params(cfg, mesh, rules)
+    opt_shapes = jax.eval_shape(
+        functools.partial(init_opt_state, cfg=train_cfg.optimizer), p_sds
+    )
+    opt_sds = _attach(
+        opt_shapes, opt_state_specs(lm_specs(cfg), train_cfg.optimizer),
+        mesh, rules,
+    )
+    return p_sds, opt_sds
+
+
+@dataclasses.dataclass
+class DryRunCell:
+    fn: Callable
+    args: Tuple[Any, ...]
+    rules: AxisRules
+    donate: Tuple[int, ...]
+    label: str
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 rules: AxisRules, seq_len: int):
+    gb = shape.global_batch
+    if cfg.input_kind == "embeddings":
+        batch = {
+            "embeds": _sds(
+                (gb, seq_len, cfg.d_model), jnp.bfloat16, mesh,
+                resolve_pspec((gb, seq_len, cfg.d_model),
+                              ("batch", "seq", "d_model"), rules, mesh),
+            ),
+            "labels": _sds(
+                (gb, seq_len), jnp.int32, mesh,
+                resolve_pspec((gb, seq_len), ("batch", "seq"), rules, mesh),
+            ),
+        }
+    else:
+        tok = _sds(
+            (gb, seq_len), jnp.int32, mesh,
+            resolve_pspec((gb, seq_len), ("batch", "seq"), rules, mesh),
+        )
+        batch = {"tokens": tok, "labels": tok}
+    return batch
+
+
+def default_train_cfg(cfg: ModelConfig, shape: ShapeConfig,
+                      batch_ways: int = 16) -> TrainConfig:
+    """Microbatch count sized so one microbatch is ≤ ~64k global tokens
+    (bounds the MoE dispatch buffer and activation live set) — but never so
+    many that the per-microbatch batch stops dividing the batch-sharding
+    ways (on the 2×16×16 mesh batch shards 32 ways; a 16-sequence
+    microbatch would silently replicate and 4× the per-device work)."""
+    tokens = shape.global_batch * shape.seq_len
+    micro = max(1, min(tokens // 65_536, shape.global_batch // batch_ways))
+    while micro > 1 and (
+        shape.global_batch % micro
+        or (shape.global_batch // micro) % batch_ways
+    ):
+        micro -= 1
+    return TrainConfig(
+        optimizer=AdamWConfig(
+            moment_dtype="int8" if cfg.name == "deepseek-v3-671b" else "f32"
+        ),
+        remat=True,
+        microbatches=micro,
+    )
+
+
+def make_step_and_inputs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    train_cfg: Optional[TrainConfig] = None,
+    rules: Optional[AxisRules] = None,
+) -> DryRunCell:
+    rules = rules or rules_for(shape, cfg)
+    label = f"{cfg.name}×{shape.name}"
+
+    if shape.kind == "train":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        batch_ways = sizes.get("pod", 1) * sizes.get("data", 1)
+        tc = train_cfg or default_train_cfg(cfg, shape, batch_ways)
+        p_sds, opt_sds = abstract_train_state(cfg, tc, mesh, rules)
+        batch = _batch_specs(cfg, shape, mesh, rules, shape.seq_len)
+        step = build_train_step(cfg, tc)
+
+        def fn(params, opt_state, batch):
+            with use_rules(mesh, rules):
+                return step(params, opt_state, batch)
+
+        return DryRunCell(fn, (p_sds, opt_sds, batch), rules, (0, 1), label)
+
+    # ---------------- serving paths (bf16 deployment params) -------------
+    p_sds = abstract_params(cfg, mesh, rules, dtype=jnp.bfloat16)
+    cache_shapes = jax.eval_shape(
+        functools.partial(
+            init_lm_caches, cfg, shape.global_batch, shape.seq_len,
+            dtype=jnp.bfloat16,
+        )
+    )
+    shard_kv = True
+    cache_sds = _attach(
+        cache_shapes, lm_cache_specs(cfg, shard_kv_seq=shard_kv), mesh, rules
+    )
+
+    if shape.kind == "prefill":
+        batch = _batch_specs(cfg, shape, mesh, rules, shape.seq_len)
+
+        def fn(params, caches, batch):
+            with use_rules(mesh, rules):
+                kw = (
+                    dict(embeds=batch["embeds"])
+                    if cfg.input_kind == "embeddings"
+                    else dict(tokens=batch["tokens"])
+                )
+                logits, aux, new_caches = lm_forward(
+                    params, cfg, caches=caches, cache_len=jnp.int32(0), **kw
+                )
+                # realistic prefill output: last-position logits + caches
+                return logits[:, -1:], new_caches
+
+        return DryRunCell(fn, (p_sds, cache_sds, batch), rules, (1,), label)
+
+    # decode: one new token against a cache holding seq_len-1 tokens
+    gb = shape.global_batch
+    if cfg.input_kind == "embeddings":
+        tok = _sds(
+            (gb, 1, cfg.d_model), jnp.bfloat16, mesh,
+            resolve_pspec((gb, 1, cfg.d_model), ("batch", "seq", "d_model"),
+                          rules, mesh),
+        )
+    else:
+        tok = _sds(
+            (gb, 1), jnp.int32, mesh,
+            resolve_pspec((gb, 1), ("batch", "seq"), rules, mesh),
+        )
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, caches, tok, cache_len):
+        with use_rules(mesh, rules):
+            if cfg.input_kind == "embeddings":
+                return lm_decode_step(
+                    params, cfg, tokens=None, embeds=tok, caches=caches,
+                    cache_len=cache_len,
+                )
+            return lm_decode_step(
+                params, cfg, tokens=tok, caches=caches, cache_len=cache_len
+            )
+
+    return DryRunCell(fn, (p_sds, cache_sds, tok, cache_len), rules, (1,), label)

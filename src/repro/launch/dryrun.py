@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes, and extract memory / cost / collective statistics.
+
+The two lines above MUST stay the first statements in this file — jax locks
+the device count at first initialization, and the 512 placeholder host
+devices exist only for this entry point (smoke tests and benches see 1).
+
+Usage:
+    # one cell (in-process):
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multi-pod] [--json out.json]
+
+    # the full 40-cell × {single,multi}-pod sweep (subprocess per cell, so
+    # one pathological compile cannot take the sweep down):
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/
+"""
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, cell_enabled, get_config
+from repro.launch.cells import make_step_and_inputs
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import active_param_count, model_flops, roofline_terms
+from repro.roofline.hlo import analyze_hlo
+
+__all__ = ["run_cell"]
+
+
+def _mem_stats(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes", "peak_memory_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: str | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_enabled(cfg, shape)
+    if not ok:
+        return {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "skipped", "reason": why,
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    cell = make_step_and_inputs(cfg, shape, mesh)
+
+    t0 = time.time()
+    jitted = jax.jit(cell.fn, donate_argnums=cell.donate)
+    lowered = jitted.lower(*cell.args)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    if save_hlo:
+        pathlib.Path(save_hlo).write_text(hlo)
+    # loop-aware HLO walk (XLA's cost_analysis does not multiply while-loop
+    # bodies by trip count, see roofline/hlo.py)
+    walk = analyze_hlo(hlo)
+    flops = walk.flops
+    byac = walk.hbm_bytes
+
+    terms = roofline_terms(flops, byac, walk.total_collective_bytes)
+    n_active = active_param_count(cfg)
+    mf = model_flops(cfg, shape, n_active)
+    mf_per_dev = mf / chips
+
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": _mem_stats(compiled),
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": {
+            "bytes_by_kind": {k: float(v) for k, v in walk.collective_bytes.items()},
+            "ops": {k: float(v) for k, v in walk.collective_ops.items()},
+            "total_bytes": float(walk.total_collective_bytes),
+        },
+        "top_dot_sites": dict(
+            sorted(walk.dot_flops_by_meta.items(), key=lambda kv: -kv[1])[:10]
+        ),
+        "roofline": terms,
+        "model_flops_global": mf,
+        "model_flops_per_dev": mf_per_dev,
+        "useful_ratio": (mf_per_dev / flops) if flops else None,
+        "n_active_params": n_active,
+    }
+    return rec
+
+
+def _print_rec(rec: dict) -> None:
+    if rec["status"] == "skipped":
+        print(f"SKIP  {rec['arch']} × {rec['shape']}: {rec['reason']}")
+        return
+    r = rec["roofline"]
+    mem = rec["memory"]
+    print(
+        f"OK    {rec['arch']} × {rec['shape']}"
+        f" [{'2×16×16' if rec['multi_pod'] else '16×16'}]"
+        f"  compile={rec['compile_s']:.1f}s"
+    )
+    if mem:
+        args_gb = mem.get("argument_size_in_bytes", 0) / 2**30
+        temp_gb = mem.get("temp_size_in_bytes", 0) / 2**30
+        print(f"      memory/device: args={args_gb:.2f} GiB temp={temp_gb:.2f} GiB")
+    print(
+        f"      roofline/device: compute={r['compute_s']*1e3:.2f} ms"
+        f" memory={r['memory_s']*1e3:.2f} ms"
+        f" collective={r['collective_s']*1e3:.2f} ms"
+        f" → {r['dominant']}-bound"
+    )
+    ur = rec.get("useful_ratio")
+    if ur:
+        print(f"      MODEL_FLOPS/HLO_FLOPs = {ur:.3f}")
+
+
+def _sweep(out_dir: str, multi_pod_only: bool = False) -> int:
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    fails = 0
+    for arch in ARCHS:
+        for shape_name in SHAPES:
+            for mp in ((True,) if multi_pod_only else (False, True)):
+                tag = f"{arch}__{shape_name}__{'mp' if mp else 'sp'}"
+                dst = out / f"{tag}.json"
+                if dst.exists():
+                    rec = json.loads(dst.read_text())
+                    print(f"cached {tag}: {rec.get('status')}")
+                    continue
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape_name,
+                    "--json", str(dst),
+                ]
+                if mp:
+                    cmd.append("--multi-pod")
+                print(f"→ {tag}", flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=3600)
+                if r.returncode != 0:
+                    fails += 1
+                    dst.write_text(json.dumps({
+                        "arch": arch, "shape": shape_name, "multi_pod": mp,
+                        "status": "error",
+                        "error": r.stderr[-4000:],
+                    }, indent=2))
+                    print(f"FAIL  {tag}\n{r.stderr[-2000:]}")
+                else:
+                    print(r.stdout.rstrip())
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS))
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="full sweep (subprocesses)")
+    ap.add_argument("--out", default="results/dryrun", help="sweep output dir")
+    ap.add_argument("--json", help="write single-cell record to this path")
+    ap.add_argument("--save-hlo", help="dump optimized HLO to this path")
+    args = ap.parse_args()
+
+    if args.all:
+        sys.exit(_sweep(args.out))
+
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape required (or --all)")
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.save_hlo)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    _print_rec(rec)
+    if args.json:
+        pathlib.Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        pathlib.Path(args.json).write_text(json.dumps(rec, indent=2))
+    sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

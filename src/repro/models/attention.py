@@ -1,0 +1,343 @@
+"""GQA attention with RoPE, optional qk-norm / qkv-bias, and a KV cache.
+
+Layouts (chosen for sharding):
+  activations  x:      (B, S, D)            batch → ("pod","data")
+  query        q:      (B, S, H, hd)        heads → "model"
+  kv cache     k, v:   (B, M, KV, hd)       M (kv_seq) → "data" for
+                                            long-context decode, else None
+
+The decode path computes attention over the sharded cache with plain
+einsums; reductions over the sharded M axis lower to small all-reduces
+(flash-decode-style combining done by the partitioner).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .common import Initializer, apply_rope, dense_init, rms_norm, rope_angles
+
+__all__ = [
+    "init_attention", "attention_specs", "attention",
+    "attention_decode_stacked",
+    "AttnCache", "init_attn_cache", "chunked_causal_attention",
+]
+
+_NEG_INF = -1e30
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array  # (B, M, KV, hd)
+    v: jax.Array  # (B, M, KV, hd)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return AttnCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attention_specs(cfg: ModelConfig):
+    """Logical-axis specs for :func:`init_attention` (no allocation)."""
+    specs = {
+        "wq": ("fsdp", "heads", "head_dim"),
+        "wk": ("fsdp", "kv_heads", "head_dim"),
+        "wv": ("fsdp", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ("heads", "head_dim")
+        specs["bk"] = ("kv_heads", "head_dim")
+        specs["bv"] = ("kv_heads", "head_dim")
+    if cfg.qk_norm:
+        specs["q_norm"] = ("head_dim",)
+        specs["k_norm"] = ("head_dim",)
+    return specs
+
+
+def init_attention(init: Initializer, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    params = {
+        "wq": dense_init(init.next(), (d, h, hd)),
+        "wk": dense_init(init.next(), (d, kv, hd)),
+        "wv": dense_init(init.next(), (d, kv, hd)),
+        "wo": dense_init(init.next(), (h, hd, d), in_axis=0),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h, hd), jnp.float32)
+        params["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        params["bv"] = jnp.zeros((kv, hd), jnp.float32)
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), jnp.float32)
+        params["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return params, attention_specs(cfg)
+
+
+def _project_qkv(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(params["k_norm"], k, cfg.norm_eps)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B,S,H,hd), k: (B,M,KV,hd) → logits (B,S,KV,G,M) in f32.
+
+    K stays in its storage dtype (bf16 cache) — the MXU accumulates in f32
+    via ``preferred_element_type``; casting the cache to f32 would
+    materialize a 2× copy of the whole KV cache per layer (the dominant
+    decode traffic before perf iteration D1, see EXPERIMENTS.md §Perf).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum(
+        "bskgh,bmkh->bskgm", qg, k, preferred_element_type=jnp.float32
+    )
+    return s * scale
+
+
+def _gqa_out(p, v, dtype):
+    """p: (B,S,KV,G,M) f32, v: (B,M,KV,hd) storage dtype → (B,S,H,hd)."""
+    out = jnp.einsum(
+        "bskgm,bmkh->bskgh", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    B, S, KV, G, hd = out.shape
+    return out.reshape(B, S, KV * G, hd).astype(dtype)
+
+
+def chunked_causal_attention(
+    q: jax.Array,           # (B, S, H, hd)
+    k: jax.Array,           # (B, M, KV, hd)
+    v: jax.Array,           # (B, M, KV, hd)
+    q_positions: jax.Array, # (B, S) absolute positions of queries
+    kv_positions: jax.Array,  # (M,) absolute positions of keys
+    scale: float,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Online-softmax attention, doubly chunked (flash-style, pure JAX).
+
+    Outer scan over query chunks, inner scan over KV chunks carrying the
+    online-softmax state — peak live logits are O(q_chunk · kv_chunk) per
+    (batch, head) instead of O(S · M), which is what lets the 4k-train and
+    32k-prefill shapes lower with sane memory.  Differentiable (nested
+    ``lax.scan``).  Compute is *not* causally pruned (future chunks are
+    masked, not skipped) — the block-causal skip is a recorded perf
+    iteration (EXPERIMENTS.md §Perf).
+    """
+    B, S, H, hd = q.shape
+    M, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    while S % q_chunk:
+        q_chunk //= 2
+    while M % kv_chunk:
+        kv_chunk //= 2
+    nq, nk = S // q_chunk, M // kv_chunk
+    f32 = jnp.float32
+
+    qg = (
+        q.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    )                                                     # (nq,B,qc,KV,G,hd)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    # Block-causal skip (perf T4): iterate ONLY the lower-triangle (i, j)
+    # chunk pairs as one flat scan — strictly-future blocks never execute,
+    # removing ~44% of attention FLOPs and traffic at nq = nk = 8.  The
+    # online-softmax state lives in full-size carries updated at slice i
+    # (blocks for a given i arrive in increasing-j order — a valid online
+    # softmax).  Masks are rebuilt from chunk indices and a local iota
+    # (perf T1): only the diagonal block masks anything.
+    assert nq == nk and S == M, "chunked path is self-attention only"
+    i_list, j_list = [], []
+    for i in range(nq):
+        for j in range(i + 1):
+            i_list.append(i)
+            j_list.append(j)
+    i_arr = jnp.asarray(i_list, jnp.int32)
+    j_arr = jnp.asarray(j_list, jnp.int32)
+
+    iq = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, kv_chunk), 0)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, kv_chunk), 1)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        i, j = xs
+        qb = jax.lax.dynamic_index_in_dim(qg, i, 0, keepdims=False)
+        kk = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+        vv = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+        # bf16 operands, f32 accumulation (no f32 copies of K/V)
+        s = jnp.einsum(
+            "bqkgh,bckh->bqkgc", qb, kk, preferred_element_type=f32
+        ) * scale
+        mask = (j * kv_chunk + ik) <= (i * q_chunk + iq)  # (qc,c)
+        mask = mask[None, :, None, None, :]
+        s = jnp.where(mask, s, _NEG_INF)
+        m_sl = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        l_sl = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        a_sl = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_cur = jnp.maximum(m_sl, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_sl - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_cur = l_sl * alpha + jnp.sum(p, axis=-1)
+        a_cur = a_sl * alpha[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(vv.dtype), vv,
+            preferred_element_type=f32,
+        )
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_cur[None], i, 0)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_cur[None], i, 0)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_cur[None], i, 0)
+        return (m, l, acc), None
+
+    init = (
+        jnp.full((nq, B, q_chunk, KV, G), _NEG_INF, f32),
+        jnp.zeros((nq, B, q_chunk, KV, G), f32),
+        jnp.zeros((nq, B, q_chunk, KV, G, hd), f32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (i_arr, j_arr))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (nq,B,qc,KV,G,hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+    return out
+
+
+# sequences longer than this use the chunked online-softmax path
+_FULL_ATTN_MAX_SEQ = 1024
+
+
+def attention(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[AttnCache] = None,
+    cache_len: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[AttnCache]]:
+    """Causal self-attention.
+
+    Prefill / train: ``cache is None`` → full causal over ``x`` itself; if a
+    cache object is wanted for subsequent decode, the caller writes k/v into
+    it (see :func:`prefill_cache`).
+
+    Decode: ``cache`` holds M past positions with ``cache_len`` valid; x has
+    S new tokens (typically 1).  Returns updated cache.
+    """
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = constrain(q, "batch", "seq", "heads", None)
+
+    if cache is None:
+        S = x.shape[1]
+        if S > _FULL_ATTN_MAX_SEQ:
+            kv_pos = jnp.arange(S, dtype=positions.dtype)
+            out = chunked_causal_attention(
+                q, k, v, positions, kv_pos, scale
+            ).astype(x.dtype)
+            y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+            return y, None
+        s = _gqa_scores(q, k, scale)  # (B,S,KV,G,M=S)
+        rows = positions[:, :, None]                       # (B,S,1)
+        cols = positions[:, None, :]                       # (B,1,S)
+        mask = (cols <= rows)[:, :, None, None, :]         # (B,S,1,1,M)
+        s = jnp.where(mask, s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = _gqa_out(p, v, x.dtype)
+        new_cache = None
+    else:
+        # write new k/v at cache_len .. cache_len+S-1
+        B, S = x.shape[:2]
+        idx = cache_len
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, idx, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, idx, 0, 0)
+        )
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
+        new_cache = AttnCache(ck, cv)
+        M = ck.shape[1]
+        s = _gqa_scores(q, ck, scale)  # (B,S,KV,G,M)
+        cols = jnp.arange(M, dtype=jnp.int32)[None, :]     # (1,M)
+        rows = positions                                    # (B,S)
+        mask = (cols[:, None, :] <= rows[:, :, None])[:, :, None, None, :]
+        s = jnp.where(mask, s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = _gqa_out(p, cv, x.dtype)
+
+    out = constrain(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def attention_decode_readonly(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,               # (B, 1, D)
+    positions: jax.Array,       # (B, 1) == cache_len
+    cache: AttnCache,           # ONE layer's slice (B, M, KV, hd), read-only
+    cache_len: jax.Array,       # () int32 — tokens already in the cache
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode step that never writes the cache (perf iteration D4).
+
+    The cache slice is consumed read-only; the current token's K/V are
+    returned to the caller, which appends ALL layers' new tokens with one
+    (L, B, 1, KV, hd) dynamic-update-slice after the layer scan.  This
+    removes the per-layer whole-slice cache copies of the scan-ys
+    formulation (53 GB/step → <1 MB/step of writes for qwen3@32k).
+
+    Attention runs over [cache ; current token] via two-segment logits —
+    no concatenated K/V is ever materialized.
+
+    Returns (y, k_new, v_new).
+    """
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = constrain(q, "batch", "seq", "heads", None)
+    M = cache.k.shape[1]
+    s_cache = _gqa_scores(q, cache.k, scale)           # (B,1,KV,G,M)
+    cols = jnp.arange(M, dtype=jnp.int32)
+    mask = (cols[None, :] < cache_len)[:, None, :][:, :, None, None, :]
+    s_cache = jnp.where(mask, s_cache, _NEG_INF)
+    s_self = _gqa_scores(q, k, scale)                  # (B,1,KV,G,1)
+    # two-segment softmax without concatenation (keeps M evenly sharded —
+    # see mla_decode_readonly)
+    mm = jnp.maximum(jnp.max(s_cache, -1, keepdims=True), s_self)
+    e_cache = jnp.exp(s_cache - mm)
+    e_self = jnp.exp(s_self - mm)
+    denom = jnp.sum(e_cache, -1, keepdims=True) + e_self
+    p_cache = e_cache / denom
+    p_self = e_self / denom
+    out = jnp.einsum(
+        "bskgm,bmkh->bskgh", p_cache.astype(cache.v.dtype), cache.v,
+        preferred_element_type=jnp.float32,
+    ) + jnp.einsum(
+        "bskgm,bmkh->bskgh", p_self.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    B, S, KV, G, _ = out.shape
+    out = out.reshape(B, S, KV * G, hd).astype(x.dtype)
+    out = constrain(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, k.astype(cache.k.dtype), v.astype(cache.v.dtype)

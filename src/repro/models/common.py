@@ -1,0 +1,94 @@
+"""Shared model components: norms, RoPE, initializers, module conventions.
+
+Module convention (no external NN library):
+
+  * ``init_<thing>(key, ...) -> (params, specs)`` — ``params`` is a nested
+    dict of arrays; ``specs`` mirrors it with tuples of *logical* axis names
+    per leaf (see :mod:`repro.distributed.sharding`).
+  * ``<thing>(params, x, ...)`` — pure apply function.
+
+All parameters are created in float32; the train/serve steps cast to the
+compute dtype (bf16 by default) at the boundary ("params in fp32, compute
+in bf16" mixed precision).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Initializer",
+    "dense_init",
+    "embed_init",
+    "rms_norm",
+    "init_rms_norm",
+    "rope_angles",
+    "apply_rope",
+    "split_key",
+]
+
+
+def split_key(key, n):
+    return jax.random.split(key, n)
+
+
+def dense_init(key, shape, in_axis: int = 0) -> jax.Array:
+    """Truncated-normal scaled by fan-in (LeCun/TN init used by most LMs)."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+def embed_init(key, shape, std: float = 0.02) -> jax.Array:
+    return std * jax.random.normal(key, shape, jnp.float32)
+
+
+class Initializer:
+    """Sequential key splitter: ``init.next()`` hands out fresh keys."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def init_rms_norm(d: int):
+    return jnp.ones((d,), jnp.float32), ("d_model",)
+
+
+def rms_norm(w: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def rope_angles(
+    positions: jax.Array, dim: int, theta: float
+) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embeddings.  positions: (..., S)."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]) — llama convention.
+
+    x: (..., S, H, dim); cos/sin: (..., S, dim/2) broadcast over heads.
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)

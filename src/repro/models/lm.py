@@ -1,0 +1,701 @@
+"""Composable causal-LM assembly for every assigned architecture family.
+
+One :class:`ModelConfig` fully determines the network.  Layers are grouped
+into *scan groups* — maximal runs of identically-structured blocks whose
+parameters are stacked along a leading ``layers`` axis and executed with
+``jax.lax.scan`` (essential for compile time at 60+ layers):
+
+  ================  =============================================
+  family            scan groups
+  ================  =============================================
+  dense / vlm /     [("attn_dense", L)]
+  audio
+  moe               [("attn_dense", n_dense_layers)?, ("attn_moe", rest)]
+  hybrid (zamba2)   [("hybrid", L / shared_every)] — each scanned unit is
+                    ``shared_every`` Mamba2 layers followed by one
+                    invocation of the *shared* attention+MLP block (weights
+                    outside the scan, reused by every invocation)
+  ssm+xlstm         [("xlstm", L / slstm_every)] — each unit is
+                    ``slstm_every − 1`` mLSTM blocks + 1 sLSTM block
+  ================  =============================================
+
+Two entry points mirror the run shapes:
+
+  * :func:`lm_forward` — full-sequence forward (train / prefill).  Returns
+    logits (+ aux losses; + caches primed for decode when requested).
+  * :func:`lm_decode_step` — one-token step against the caches.
+
+``init_lm(key, cfg)`` allocates parameters; ``lm_specs(cfg)`` returns the
+matching logical-sharding-spec tree *without any allocation* (the dry-run
+combines it with ``jax.eval_shape(init_lm, ...)`` so full-size models are
+never materialized on the host).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .attention import (
+    AttnCache, attention, attention_decode_readonly, attention_specs,
+    init_attention, init_attn_cache,
+)
+from .common import Initializer, embed_init, rms_norm
+from .mla import (
+    MLACache, init_mla, init_mla_cache, mla, mla_decode_readonly, mla_specs,
+)
+from .mlp import init_mlp, mlp, mlp_specs
+from .moe import init_moe, moe, moe_specs
+from .ssm import (
+    SSMCache, init_mamba2, init_ssm_cache, mamba2, mamba2_decode, mamba2_specs,
+)
+from .xlstm import (
+    MLSTMCache, SLSTMCache,
+    init_mlstm_block, init_mlstm_cache, init_slstm_block, init_slstm_cache,
+    mlstm_block, mlstm_specs, slstm_block, slstm_specs,
+)
+
+__all__ = [
+    "GroupPlan", "make_plan", "init_lm", "lm_specs",
+    "lm_forward", "lm_decode_step", "mtp_logits",
+    "init_lm_caches", "lm_cache_specs", "param_count",
+]
+
+
+class GroupPlan(NamedTuple):
+    kind: str    # attn_dense | attn_moe | hybrid | xlstm
+    count: int   # number of scanned units
+
+
+def make_plan(cfg: ModelConfig) -> List[GroupPlan]:
+    if cfg.xlstm is not None:
+        k = cfg.xlstm.slstm_every
+        assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+        return [GroupPlan("xlstm", cfg.n_layers // k)]
+    if cfg.hybrid is not None:
+        k = cfg.hybrid.shared_every
+        assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+        return [GroupPlan("hybrid", cfg.n_layers // k)]
+    if cfg.moe is not None:
+        nd = cfg.moe.n_dense_layers
+        plan = []
+        if nd:
+            plan.append(GroupPlan("attn_dense", nd))
+        plan.append(GroupPlan("attn_moe", cfg.n_layers - nd))
+        return plan
+    return [GroupPlan("attn_dense", cfg.n_layers)]
+
+
+# --------------------------------------------------------------------- #
+# per-unit init / specs
+# --------------------------------------------------------------------- #
+def _attn_kind(cfg: ModelConfig) -> str:
+    return "mla" if cfg.mla is not None else "gqa"
+
+
+def _init_attn_block(init: Initializer, cfg: ModelConfig, use_moe: bool):
+    """One transformer block: norm → attn → norm → mlp/moe."""
+    attn_p, _ = (init_mla if _attn_kind(cfg) == "mla" else init_attention)(init, cfg)
+    params = {
+        "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn_p,
+        "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if use_moe:
+        params["moe"], _ = init_moe(init, cfg)
+    else:
+        params["mlp"], _ = init_mlp(init, cfg.d_model, _dense_ff(cfg))
+    return params
+
+
+def _dense_ff(cfg: ModelConfig) -> int:
+    """FFN width for *dense* blocks.  In MoE configs ``cfg.d_ff`` is the
+    per-expert width; the leading dense layers use ``moe.d_ff_dense``."""
+    if cfg.moe is not None and cfg.moe.d_ff_dense:
+        return cfg.moe.d_ff_dense
+    return cfg.d_ff
+
+
+def _attn_block_specs(cfg: ModelConfig, use_moe: bool):
+    specs: Dict[str, Any] = {
+        "norm1": ("d_model",),
+        "attn": (mla_specs if _attn_kind(cfg) == "mla" else attention_specs)(cfg),
+        "norm2": ("d_model",),
+    }
+    if use_moe:
+        specs["moe"] = moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_specs()
+    return specs
+
+
+def _init_hybrid_unit(init: Initializer, cfg: ModelConfig):
+    """``shared_every`` stacked Mamba2 layers (shared block lives outside)."""
+    k = cfg.hybrid.shared_every
+    layers = [_init_mamba_layer(init, cfg) for _ in range(k)]
+    return _stack(layers)
+
+
+def _init_mamba_layer(init: Initializer, cfg: ModelConfig):
+    p, _ = init_mamba2(init, cfg)
+    return {"norm": jnp.ones((cfg.d_model,), jnp.float32), "mamba": p}
+
+
+def _mamba_layer_specs(cfg: ModelConfig):
+    return {"norm": ("d_model",), "mamba": mamba2_specs(cfg)}
+
+
+def _init_xlstm_unit(init: Initializer, cfg: ModelConfig):
+    k = cfg.xlstm.slstm_every
+    mls = [init_mlstm_block(init, cfg)[0] for _ in range(k - 1)]
+    sls = init_slstm_block(init, cfg)[0]
+    return {"mlstm": _stack(mls), "slstm": sls}
+
+
+def _xlstm_unit_specs(cfg: ModelConfig):
+    return {
+        "mlstm": _prepend_axis(mlstm_specs(cfg)),
+        "slstm": slstm_specs(cfg),
+    }
+
+
+def _stack(trees: List[Any]):
+    if len(trees) == 1:
+        return jax.tree.map(lambda x: x[None], trees[0])
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _prepend_axis(spec_tree):
+    """Prepend the (replicated) stacked-layers axis to every leaf spec."""
+    return jax.tree.map(
+        lambda s: ("layers",) + tuple(s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+
+# --------------------------------------------------------------------- #
+# top-level init / specs
+# --------------------------------------------------------------------- #
+def init_lm(key: jax.Array, cfg: ModelConfig):
+    """Allocate all parameters (float32 masters)."""
+    init = Initializer(key)
+    plan = make_plan(cfg)
+    groups = []
+    for g in plan:
+        if g.kind in ("attn_dense", "attn_moe"):
+            use_moe = g.kind == "attn_moe"
+            units = [_init_attn_block(init, cfg, use_moe) for _ in range(g.count)]
+            groups.append({"stacked": _stack(units)})
+        elif g.kind == "hybrid":
+            units = [_init_hybrid_unit(init, cfg) for _ in range(g.count)]
+            groups.append(
+                {
+                    "stacked": _stack(units),
+                    "shared": _init_attn_block(init, cfg, use_moe=False),
+                }
+            )
+        elif g.kind == "xlstm":
+            units = [_init_xlstm_unit(init, cfg) for _ in range(g.count)]
+            groups.append({"stacked": _stack(units)})
+        else:  # pragma: no cover
+            raise ValueError(g.kind)
+
+    params: Dict[str, Any] = {
+        "embed": embed_init(init.next(), (cfg.vocab_size, cfg.d_model)),
+        "groups": groups,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(init.next(), (cfg.d_model, cfg.vocab_size)) * (
+            cfg.d_model ** -0.5
+        )
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": embed_init(init.next(), (2 * cfg.d_model, cfg.d_model))
+            * ((2 * cfg.d_model) ** -0.5),
+            "block": _init_attn_block(init, cfg, use_moe=False),
+            "norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+def lm_specs(cfg: ModelConfig):
+    """Logical-sharding spec tree mirroring :func:`init_lm` — no allocation."""
+    plan = make_plan(cfg)
+    groups = []
+    for g in plan:
+        if g.kind in ("attn_dense", "attn_moe"):
+            unit = _attn_block_specs(cfg, g.kind == "attn_moe")
+            groups.append({"stacked": _prepend_axis(unit)})
+        elif g.kind == "hybrid":
+            unit = _prepend_axis(_mamba_layer_specs(cfg))  # inner (se) axis
+            groups.append(
+                {
+                    "stacked": _prepend_axis(unit),        # outer (groups) axis
+                    "shared": _attn_block_specs(cfg, use_moe=False),
+                }
+            )
+        elif g.kind == "xlstm":
+            groups.append({"stacked": _prepend_axis(_xlstm_unit_specs(cfg))})
+        else:  # pragma: no cover
+            raise ValueError(g.kind)
+    specs: Dict[str, Any] = {
+        "embed": ("vocab", "fsdp"),
+        "groups": groups,
+        "final_norm": ("d_model",),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ("fsdp", "vocab")
+    if cfg.mtp:
+        specs["mtp"] = {
+            "proj": ("fsdp", None),
+            "block": _attn_block_specs(cfg, use_moe=False),
+            "norm": ("d_model",),
+        }
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import numpy as _np
+
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.key(0))
+    return sum(int(_np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+# --------------------------------------------------------------------- #
+# caches
+# --------------------------------------------------------------------- #
+def init_lm_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode caches, structured parallel to ``params['groups']``."""
+    plan = make_plan(cfg)
+    caches = []
+    for g in plan:
+        if g.kind in ("attn_dense", "attn_moe"):
+            one = (
+                init_mla_cache(cfg, batch, max_len, dtype)
+                if _attn_kind(cfg) == "mla"
+                else init_attn_cache(cfg, batch, max_len, dtype)
+            )
+            caches.append(jax.tree.map(lambda x: _tile(x, g.count), one))
+        elif g.kind == "hybrid":
+            m = init_ssm_cache(cfg, batch, dtype)
+            caches.append(
+                {
+                    "mamba": jax.tree.map(
+                        lambda x: _tile(_tile(x, cfg.hybrid.shared_every), g.count), m
+                    ),
+                    "attn": jax.tree.map(
+                        lambda x: _tile(x, g.count),
+                        init_attn_cache(cfg, batch, max_len, dtype),
+                    ),
+                }
+            )
+        elif g.kind == "xlstm":
+            k = cfg.xlstm.slstm_every
+            ml = init_mlstm_cache(cfg, batch, dtype)
+            sl = init_slstm_cache(cfg, batch, dtype)
+            caches.append(
+                {
+                    "mlstm": jax.tree.map(
+                        lambda x: _tile(_tile(x, k - 1), g.count), ml
+                    ),
+                    "slstm": jax.tree.map(lambda x: _tile(x, g.count), sl),
+                }
+            )
+    return caches
+
+
+def _tile(x: jax.Array, n: int) -> jax.Array:
+    return jnp.broadcast_to(x[None], (n,) + x.shape)
+
+
+def lm_cache_specs(cfg: ModelConfig, shard_kv_seq: bool = False):
+    """Logical-axis spec tree for :func:`init_lm_caches`.
+
+    KV caches are sharded batch-first; ``shard_kv_seq=True`` additionally
+    shards the sequence axis of attention KV caches over ``data`` (SP for
+    long-context decode, where batch is too small to fill the mesh).
+    """
+    kv_seq = "kv_seq" if shard_kv_seq else None
+    plan = make_plan(cfg)
+
+    def attn_cache_spec():
+        if _attn_kind(cfg) == "mla":
+            return MLACache(
+                c_kv=("layers", "batch", kv_seq, None),
+                k_rope=("layers", "batch", kv_seq, None),
+            )
+        return AttnCache(
+            k=("layers", "batch", kv_seq, "kv_heads", None),
+            v=("layers", "batch", kv_seq, "kv_heads", None),
+        )
+
+    specs = []
+    for g in plan:
+        if g.kind in ("attn_dense", "attn_moe"):
+            specs.append(attn_cache_spec())
+        elif g.kind == "hybrid":
+            specs.append(
+                {
+                    "mamba": SSMCache(
+                        conv=("layers", "layers", "batch", None, "ff"),
+                        state=("layers", "layers", "batch", "heads", None, None),
+                    ),
+                    "attn": attn_cache_spec(),
+                }
+            )
+        elif g.kind == "xlstm":
+            specs.append(
+                {
+                    "mlstm": MLSTMCache(
+                        C=("layers", "layers", "batch", "heads", None, None),
+                        n=("layers", "layers", "batch", "heads", None),
+                        m=("layers", "layers", "batch", "heads"),
+                        conv=("layers", "layers", "batch", None, "ff"),
+                    ),
+                    "slstm": SLSTMCache(
+                        c=("layers", "batch", "heads", None),
+                        n=("layers", "batch", "heads", None),
+                        h=("layers", "batch", "heads", None),
+                        m=("layers", "batch", "heads", None),
+                        conv=("layers", "batch", None, "d_model"),
+                    ),
+                }
+            )
+    return specs
+
+
+# --------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------- #
+def _attn_block_decode(params, cfg: ModelConfig, x, positions, cache,
+                       cache_len, use_moe: bool):
+    """Decode-step transformer block; the cache slice is READ-ONLY.
+
+    Returns (x, (new_token_a, new_token_b)) — the layer's K/V (or latent)
+    for the current token, appended by the caller with one stacked DUS
+    after the layer scan (perf iteration D4).  MoE always runs dropless
+    here (serving correctness — see moe()).
+    """
+    attn_fn = (
+        mla_decode_readonly if _attn_kind(cfg) == "mla"
+        else attention_decode_readonly
+    )
+    h = rms_norm(params["norm1"], x, cfg.norm_eps)
+    a, n1, n2 = attn_fn(
+        params["attn"], cfg, h, positions, cache, cache_len
+    )
+    x = x + a
+    h = rms_norm(params["norm2"], x, cfg.norm_eps)
+    if use_moe:
+        y, _ = moe(params["moe"], cfg, h, dropless=True)
+    else:
+        y = mlp(params["mlp"], h)
+    return x + y, (n1, n2)
+
+
+def _append_tokens(cache, news, cache_len):
+    """One stacked (L, B, 1, ·) DUS per cache leaf — the only cache write
+    of a decode step."""
+    zero = jnp.int32(0)
+    if isinstance(cache, MLACache):
+        return MLACache(
+            c_kv=jax.lax.dynamic_update_slice(
+                cache.c_kv, news[0], (zero, zero, cache_len, zero)
+            ),
+            k_rope=jax.lax.dynamic_update_slice(
+                cache.k_rope, news[1], (zero, zero, cache_len, zero)
+            ),
+        )
+    return AttnCache(
+        k=jax.lax.dynamic_update_slice(
+            cache.k, news[0], (zero, zero, cache_len, zero, zero)
+        ),
+        v=jax.lax.dynamic_update_slice(
+            cache.v, news[1], (zero, zero, cache_len, zero, zero)
+        ),
+    )
+
+
+def _attn_block_apply(params, cfg: ModelConfig, x, positions, cache, cache_len,
+                      use_moe: bool, moe_dropless: bool = False):
+    """One transformer block.  Returns (x, new_cache, aux)."""
+    attn_fn = mla if _attn_kind(cfg) == "mla" else attention
+    h = rms_norm(params["norm1"], x, cfg.norm_eps)
+    a, new_cache = attn_fn(params["attn"], cfg, h, positions, cache, cache_len)
+    x = x + a
+    h = rms_norm(params["norm2"], x, cfg.norm_eps)
+    if use_moe:
+        y, aux = moe(params["moe"], cfg, h, dropless=moe_dropless)
+    else:
+        y, aux = mlp(params["mlp"], h), jnp.zeros((), jnp.float32)
+    return x + y, new_cache, aux
+
+
+def _scan_group(body, x, stacked_params, stacked_caches, remat: bool):
+    """Scan ``body(x, p, c) → (x, new_c, aux)`` over the stacked layer axis.
+
+    ``stacked_caches is None`` threads ``c=None`` (train / cache-less
+    prefill) and returns ``None`` caches.
+    """
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if stacked_caches is None:
+        def f(carry, p):
+            x, aux = carry
+            x, _, a = body(x, p, None)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            f, (x, jnp.zeros((), jnp.float32)), stacked_params
+        )
+        return x, aux, None
+
+    def f(carry, xs):
+        x, aux = carry
+        p, c = xs
+        x, new_c, a = body(x, p, c)
+        return (x, aux + a), new_c
+
+    (x, aux), new_caches = jax.lax.scan(
+        f, (x, jnp.zeros((), jnp.float32)), (stacked_params, stacked_caches)
+    )
+    return x, aux, new_caches
+
+
+def lm_forward(
+    params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,     # (B, S) int32
+    embeds: Optional[jax.Array] = None,     # (B, S, D) — modality-stub input
+    positions: Optional[jax.Array] = None,  # (B, S)
+    caches=None,                            # from init_lm_caches (prime-for-decode)
+    cache_len: Optional[jax.Array] = None,  # () int32 — write offset
+    compute_dtype=jnp.bfloat16,
+    remat: bool = False,
+    return_hidden: bool = False,
+    moe_dropless: bool = False,
+):
+    """Full-sequence forward (train / prefill).
+
+    Returns ``(logits, aux, new_caches[, hidden])``: ``aux`` is the summed
+    MoE load-balance loss; ``new_caches`` is None unless ``caches`` given.
+    """
+    if embeds is not None:
+        x = embeds.astype(compute_dtype)
+        B, S = x.shape[:2]
+    else:
+        B, S = tokens.shape
+        x = params["embed"].astype(compute_dtype)[tokens]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "batch", "seq", "d_model")
+
+    plan = make_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Optional[list] = [] if caches is not None else None
+
+    for gi, g in enumerate(plan):
+        gp = params["groups"][gi]
+        gc = caches[gi] if caches is not None else None
+        if g.kind in ("attn_dense", "attn_moe"):
+            use_moe = g.kind == "attn_moe"
+
+            def body(x, p, c, _use_moe=use_moe):
+                return _attn_block_apply(
+                    p, cfg, x, positions, c, cache_len, _use_moe,
+                    moe_dropless=moe_dropless,
+                )
+
+            x, aux, nc = _scan_group(
+                body, x, gp["stacked"],
+                gc,
+                remat,
+            )
+            aux_total += aux
+        elif g.kind == "hybrid":
+            shared_p = gp["shared"]
+
+            def body(x, p, c, _sp=shared_p):
+                mamba_p = p
+                mc = c["mamba"] if c is not None else None
+
+                def inner(x, ip, ic):
+                    h = rms_norm(ip["norm"], x, cfg.norm_eps)
+                    y, nc = mamba2(ip["mamba"], cfg, h, ic)
+                    return x + y, nc, jnp.zeros((), jnp.float32)
+
+                x, _, n_mc = _scan_group(
+                    inner, x, mamba_p,
+                    mc,
+                    remat=False,
+                )
+                ac = c["attn"] if c is not None else None
+                x, n_ac, _ = _attn_block_apply(
+                    _sp, cfg, x, positions, ac, cache_len, use_moe=False
+                )
+                out_c = (
+                    {"mamba": n_mc, "attn": n_ac} if c is not None else None
+                )
+                return x, out_c, jnp.zeros((), jnp.float32)
+
+            x, _, nc = _scan_group(
+                body, x, gp["stacked"],
+                gc,
+                remat,
+            )
+        elif g.kind == "xlstm":
+            k = cfg.xlstm.slstm_every
+
+            def body(x, p, c):
+                mcs = c["mlstm"] if c is not None else None
+
+                def inner(x, ip, ic):
+                    y, nc = mlstm_block(ip, cfg, x, ic)
+                    return y, nc, jnp.zeros((), jnp.float32)
+
+                x, _, n_ml = _scan_group(
+                    inner, x, p["mlstm"],
+                    mcs,
+                    remat=False,
+                )
+                sc = c["slstm"] if c is not None else None
+                x, n_sl = slstm_block(p["slstm"], cfg, x, sc)
+                out_c = {"mlstm": n_ml, "slstm": n_sl} if c is not None else None
+                return x, out_c, jnp.zeros((), jnp.float32)
+
+            x, _, nc = _scan_group(
+                body, x, gp["stacked"],
+                gc,
+                remat,
+            )
+        if new_caches is not None:
+            new_caches.append(nc)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["head"]
+    ).astype(compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    if return_hidden:
+        return logits, aux_total, new_caches, x
+    return logits, aux_total, new_caches
+
+
+def lm_decode_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,          # (B, 1) int32 (or embeds (B, 1, D))
+    caches,
+    cache_len: jax.Array,       # () int32 — current length (write position)
+    compute_dtype=jnp.bfloat16,
+    embeds: Optional[jax.Array] = None,
+):
+    """One decode step.  Returns (logits (B, 1, V), new_caches)."""
+    if embeds is not None:
+        B = embeds.shape[0]
+    else:
+        B = tokens.shape[0]
+    positions = jnp.broadcast_to(cache_len[None, None], (B, 1)).astype(jnp.int32)
+
+    if embeds is not None:
+        x = embeds.astype(compute_dtype)
+    else:
+        x = params["embed"].astype(compute_dtype)[tokens]
+    x = constrain(x, "batch", "seq", "d_model")
+
+    plan = make_plan(cfg)
+    new_caches = []
+    for gi, g in enumerate(plan):
+        gp = params["groups"][gi]
+        gc = caches[gi]
+        if g.kind in ("attn_dense", "attn_moe"):
+            # Perf D4: cache enters the scan as READ-ONLY xs; each layer
+            # emits only its new-token K/V (or latent) as tiny ys; a single
+            # stacked DUS appends all layers' tokens afterwards.  No
+            # per-layer cache copies (scan-ys) and no carry copies.
+            use_moe = g.kind == "attn_moe"
+
+            def body(x, p, c, _use_moe=use_moe):
+                x, news = _attn_block_decode(
+                    p, cfg, x, positions, c, cache_len, _use_moe
+                )
+                return x, news, jnp.zeros((), jnp.float32)
+
+            x, _, news = _scan_group(body, x, gp["stacked"], gc, remat=False)
+            nc = _append_tokens(gc, news, cache_len)
+        elif g.kind == "hybrid":
+            shared_p = gp["shared"]
+
+            def body(x, p, c, _sp=shared_p):
+                def inner(x, ip, ic):
+                    h = rms_norm(ip["norm"], x, cfg.norm_eps)
+                    y, nci = mamba2_decode(ip["mamba"], cfg, h, ic)
+                    return x + y, nci, jnp.zeros((), jnp.float32)
+
+                x, _, n_mc = _scan_group(inner, x, p, c["mamba"], remat=False)
+                x, news = _attn_block_decode(
+                    _sp, cfg, x, positions, c["attn"], cache_len, use_moe=False
+                )
+                return x, {"mamba": n_mc, "news": news}, jnp.zeros((), jnp.float32)
+
+            x, _, outs = _scan_group(body, x, gp["stacked"], gc, remat=False)
+            nc = {
+                "mamba": outs["mamba"],
+                "attn": _append_tokens(gc["attn"], outs["news"], cache_len),
+            }
+        elif g.kind == "xlstm":
+            def body(x, p, c):
+                def inner(x, ip, ic):
+                    y, nc = mlstm_block(ip, cfg, x, ic)
+                    return y, nc, jnp.zeros((), jnp.float32)
+
+                x, _, n_ml = _scan_group(inner, x, p["mlstm"], c["mlstm"], remat=False)
+                x, n_sl = slstm_block(p["slstm"], cfg, x, c["slstm"])
+                return x, {"mlstm": n_ml, "slstm": n_sl}, jnp.zeros((), jnp.float32)
+
+            x, _, nc = _scan_group(body, x, gp["stacked"], gc, remat=False)
+        new_caches.append(nc)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["head"]
+    ).astype(compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, new_caches
+
+
+def mtp_logits(
+    params,
+    cfg: ModelConfig,
+    hidden: jax.Array,       # (B, S, D) post-final-norm hidden from lm_forward
+    next_tokens: jax.Array,  # (B, S) the t+1 token ids (teacher-forced)
+    compute_dtype=jnp.bfloat16,
+):
+    """DeepSeek-V3 multi-token-prediction head: predict token t+2.
+
+    ``h' = Block(W_proj [h_t ; Emb(t_{t+1})])``, logits through the shared
+    output head.  One extra (dense) transformer block, used in training only.
+    """
+    assert cfg.mtp and "mtp" in params
+    B, S, D = hidden.shape
+    emb = params["embed"].astype(compute_dtype)[next_tokens]
+    h = jnp.concatenate([hidden.astype(compute_dtype), emb], axis=-1)
+    h = jnp.einsum("bse,ed->bsd", h, params["mtp"]["proj"].astype(compute_dtype))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h, _, _ = _attn_block_apply(
+        params["mtp"]["block"], cfg, h, positions, None, None, use_moe=False
+    )
+    h = rms_norm(params["mtp"]["norm"], h, cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["head"]
+    ).astype(compute_dtype)
+    return jnp.einsum("bsd,dv->bsv", h, head)

@@ -1,0 +1,320 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are produced through low-rank *latent* projections:
+
+  c_q  = x W_dq           (d → q_lora_rank),  RMS-normed
+  q    = c_q W_uq         → per head: [q_nope (128) | q_rope (64)]
+  c_kv = x W_dkv          (d → kv_lora_rank), RMS-normed
+  k    = [c_kv W_uk | k_rope]  — k_rope (64) is produced directly from x and
+                                 shared across heads
+  v    = c_kv W_uv        → per head 128
+
+Only ``(c_kv, k_rope)`` is cached for decode — the MLA memory saving — and
+the decode path uses the **absorbed** formulation: W_uk is folded into the
+query (scores in latent space) and W_uv into the output projection, so
+per-step work is O(S · kv_lora_rank) per head with no K/V materialization.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .common import Initializer, apply_rope, dense_init, rms_norm, rope_angles
+
+__all__ = ["init_mla", "mla_specs", "mla", "MLACache", "init_mla_cache"]
+
+_NEG_INF = -1e30
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array   # (B, M, kv_lora_rank)
+    k_rope: jax.Array  # (B, M, qk_rope_head_dim)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    )
+
+
+def mla_specs(cfg: ModelConfig):
+    """Logical-axis specs for :func:`init_mla` (no allocation)."""
+    return {
+        "w_dq": ("fsdp", None),
+        "q_norm": (None,),
+        "w_uq": ("fsdp", "heads", None),
+        "w_dkv": ("fsdp", None),
+        "kv_norm": (None,),
+        "w_krope": ("fsdp", None),
+        "w_uk": (None, "heads", None),
+        "w_uv": (None, "heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+
+
+def init_mla(init: Initializer, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qh = m.qk_nope_head_dim + m.qk_rope_head_dim
+    params = {
+        "w_dq": dense_init(init.next(), (d, m.q_lora_rank)),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "w_uq": dense_init(init.next(), (m.q_lora_rank, h, qh)),
+        "w_dkv": dense_init(init.next(), (d, m.kv_lora_rank)),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "w_krope": dense_init(init.next(), (d, m.qk_rope_head_dim)),
+        "w_uk": dense_init(init.next(), (m.kv_lora_rank, h, m.qk_nope_head_dim)),
+        "w_uv": dense_init(init.next(), (m.kv_lora_rank, h, m.v_head_dim)),
+        "wo": dense_init(init.next(), (h, m.v_head_dim, d), in_axis=0),
+    }
+    return params, mla_specs(cfg)
+
+
+def _latents(params, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    c_q = jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(dt))
+    c_q = rms_norm(params["q_norm"], c_q, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", c_q, params["w_uq"].astype(dt))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim :]
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    c_kv = rms_norm(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_krope"].astype(dt))
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_chunked_prefill(
+    q_nope, q_rope, c_kv, k_rope, w_uk, w_uv, positions, scale,
+    q_chunk: int = 512, kv_chunk: int = 512,
+):
+    """Doubly-chunked causal MLA prefill.
+
+    Outer scan over KV chunks (each materializes its per-head K/V from the
+    latent exactly once — no recompute, unlike an outer-Q loop), inner scan
+    over query chunks updating slices of the full-size online-softmax state.
+    Peak live logits are O(q_chunk · kv_chunk) per (batch, head).
+    """
+    B, S, H, dn = q_nope.shape
+    M, r = c_kv.shape[1], c_kv.shape[2]
+    dv = w_uv.shape[-1]
+    f32 = jnp.float32
+    while S % q_chunk:
+        q_chunk //= 2
+    while M % kv_chunk:
+        kv_chunk //= 2
+    nq, nk = S // q_chunk, M // kv_chunk
+
+    qn = q_nope.reshape(B, nq, q_chunk, H, dn).transpose(1, 0, 2, 3, 4)
+    qr = q_rope.reshape(B, nq, q_chunk, H, -1).transpose(1, 0, 2, 3, 4)
+    ckv_c = c_kv.reshape(B, nk, kv_chunk, r).transpose(1, 0, 2, 3)
+    krp_c = k_rope.reshape(B, nk, kv_chunk, -1).transpose(1, 0, 2, 3)
+
+    # local-iota causal masks rebuilt per block (perf T1 — see attention.py)
+    iq_ = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, kv_chunk), 0)
+    ik_ = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, kv_chunk), 1)
+
+    def kv_body(carry, kvs):
+        ckv, krp, j = kvs
+        cdt = ckv.dtype
+        k_nope = jnp.einsum("bcr,rhk->bchk", ckv, w_uk.astype(cdt))
+        v_c = jnp.einsum("bcr,rhk->bchk", ckv, w_uv.astype(cdt))
+
+        def q_body(carry2, qs):
+            m, l, acc = carry2
+            i, qnb, qrb = qs
+            s = jnp.einsum(
+                "bqhk,bchk->bqhc", qnb, k_nope, preferred_element_type=f32
+            )
+            s = s + jnp.einsum(
+                "bqhk,bck->bqhc", qrb, krp, preferred_element_type=f32
+            )
+            s = s * scale
+            mask = (j * kv_chunk + ik_) <= (i * q_chunk + iq_)   # (qc,c)
+            mask = mask[None, :, None, :]
+            s = jnp.where(mask, s, _NEG_INF)
+            off = i * q_chunk
+            m_sl = jax.lax.dynamic_slice(m, (0, off, 0), (B, q_chunk, H))
+            l_sl = jax.lax.dynamic_slice(l, (0, off, 0), (B, q_chunk, H))
+            a_sl = jax.lax.dynamic_slice(acc, (0, off, 0, 0), (B, q_chunk, H, dv))
+            m_cur = jnp.maximum(m_sl, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_sl - m_cur)
+            p = jnp.exp(s - m_cur[..., None])
+            p = jnp.where(mask, p, 0.0)
+            l_new = l_sl * alpha + jnp.sum(p, axis=-1)
+            a_new = a_sl * alpha[..., None] + jnp.einsum(
+                "bqhc,bchk->bqhk", p.astype(v_c.dtype), v_c,
+                preferred_element_type=f32,
+            )
+            m = jax.lax.dynamic_update_slice(m, m_cur, (0, off, 0))
+            l = jax.lax.dynamic_update_slice(l, l_new, (0, off, 0))
+            acc = jax.lax.dynamic_update_slice(acc, a_new, (0, off, 0, 0))
+            return (m, l, acc), None
+
+        carry, _ = jax.lax.scan(
+            q_body, carry, (jnp.arange(nq, dtype=jnp.int32), qn, qr)
+        )
+        return carry, None
+
+    init = (
+        jnp.full((B, S, H), _NEG_INF, f32),
+        jnp.zeros((B, S, H), f32),
+        jnp.zeros((B, S, H, dv), f32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        kv_body, init, (ckv_c, krp_c, jnp.arange(nk, dtype=jnp.int32))
+    )
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+# sequences longer than this use the chunked online-softmax prefill path
+_FULL_ATTN_MAX_SEQ = 1024
+
+
+def mla(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[MLACache] = None,
+    cache_len: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[MLACache]]:
+    m = cfg.mla
+    h = cfg.n_heads
+    dt = x.dtype
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _latents(params, cfg, x, positions)
+    q_nope = constrain(q_nope, "batch", "seq", "heads", None)
+
+    if cache is None:
+        S = x.shape[1]
+        if S > _FULL_ATTN_MAX_SEQ:
+            out = _mla_chunked_prefill(
+                q_nope, q_rope, c_kv, k_rope,
+                params["w_uk"], params["w_uv"], positions, scale,
+            ).astype(dt)
+            out = constrain(out, "batch", "seq", "heads", None)
+            return (
+                jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt)),
+                None,
+            )
+        # prefill/train (short sequences): materialize per-head K and V
+        k_nope = jnp.einsum("bmr,rhk->bmhk", c_kv, params["w_uk"].astype(dt))
+        v = jnp.einsum("bmr,rhk->bmhk", c_kv, params["w_uv"].astype(dt))
+        s = jnp.einsum(
+            "bshk,bmhk->bshm", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32)
+        )
+        s = s + jnp.einsum(
+            "bshk,bmk->bshm", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+        )
+        s = s * scale
+        rows = positions[:, :, None]                    # (B,S,1)
+        cols = positions[:, None, :]                    # (B,1,M)
+        s = jnp.where((cols <= rows)[:, :, None, :], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bshm,bmhk->bshk", p, v.astype(jnp.float32)).astype(dt)
+        new_cache = None
+    else:
+        # decode: absorbed formulation over the latent cache
+        idx = cache_len
+        ckv = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, idx, 0)
+        )
+        krp = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, idx, 0)
+        )
+        ckv = constrain(ckv, "batch", "kv_seq", None)
+        krp = constrain(krp, "batch", "kv_seq", None)
+        new_cache = MLACache(ckv, krp)
+        M = ckv.shape[1]
+        # absorb W_uk into q: (B,S,H,nope) × (r,H,nope) → (B,S,H,r)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"].astype(dt))
+        # latent cache stays in storage dtype; MXU accumulates in f32
+        # (perf iteration D1: no f32 copy of the cache)
+        s = jnp.einsum(
+            "bshr,bmr->bshm", q_lat, ckv, preferred_element_type=jnp.float32
+        )
+        s = s + jnp.einsum(
+            "bshk,bmk->bshm", q_rope, krp, preferred_element_type=jnp.float32
+        )
+        s = s * scale
+        cols = jnp.arange(M, dtype=jnp.int32)[None, None, None, :]
+        mask = cols <= positions[:, :, None, None]
+        s = jnp.where(mask, s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # attention output in latent space, then absorb W_uv
+        o_lat = jnp.einsum(
+            "bshm,bmr->bshr", p.astype(ckv.dtype), ckv,
+            preferred_element_type=jnp.float32,
+        )
+        out = jnp.einsum(
+            "bshr,rhk->bshk", o_lat, params["w_uv"].astype(jnp.float32)
+        ).astype(dt)
+
+    out = constrain(out, "batch", "seq", "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt)), new_cache
+
+
+def mla_decode_readonly(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,            # (B, 1, D)
+    positions: jax.Array,    # (B, 1) == cache_len
+    cache: MLACache,         # ONE layer's latent slice (B, M, ·), read-only
+    cache_len: jax.Array,    # () int32
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-form decode, cache read-only (perf iteration D4 — see
+    attention.attention_decode_readonly).  Returns (y, c_kv_new, k_rope_new)."""
+    m = cfg.mla
+    dt = x.dtype
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _latents(params, cfg, x, positions)
+    q_nope = constrain(q_nope, "batch", "seq", "heads", None)
+    M = cache.c_kv.shape[1]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"].astype(dt))
+    s_cache = jnp.einsum("bshr,bmr->bshm", q_lat, cache.c_kv,
+                         preferred_element_type=jnp.float32)
+    s_cache = s_cache + jnp.einsum("bshk,bmk->bshm", q_rope, cache.k_rope,
+                                   preferred_element_type=jnp.float32)
+    cols = jnp.arange(M, dtype=jnp.int32)
+    mask = (cols[None, :] < cache_len)[:, None, None, :]
+    s_cache = jnp.where(mask, s_cache * scale, _NEG_INF)
+    s_self = (
+        jnp.einsum("bshr,bmr->bshm", q_lat, c_kv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bshk,bmk->bshm", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * scale                                              # (B,1,H,1)
+    # two-segment softmax WITHOUT concatenation: an (M+1)-length logits
+    # tensor breaks the even kv_seq sharding of M and forces a per-layer
+    # reshard (observed 1.7× regression on deepseek-v3 decode, multi-pod)
+    mm = jnp.maximum(jnp.max(s_cache, -1, keepdims=True), s_self)
+    e_cache = jnp.exp(s_cache - mm)
+    e_self = jnp.exp(s_self - mm)
+    denom = jnp.sum(e_cache, -1, keepdims=True) + e_self
+    p_cache = e_cache / denom
+    p_self = e_self / denom
+    o_lat = jnp.einsum(
+        "bshm,bmr->bshr", p_cache.astype(cache.c_kv.dtype), cache.c_kv,
+        preferred_element_type=jnp.float32,
+    ) + jnp.einsum(
+        "bshm,bmr->bshr", p_self.astype(c_kv.dtype), c_kv,
+        preferred_element_type=jnp.float32,
+    )
+    out = jnp.einsum(
+        "bshr,rhk->bshk", o_lat, params["w_uv"].astype(jnp.float32)
+    ).astype(dt)
+    out = constrain(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, c_kv.astype(cache.c_kv.dtype), k_rope.astype(cache.k_rope.dtype)

@@ -1,0 +1,38 @@
+"""SwiGLU MLP (llama/qwen convention: gate ⊙ silu, no biases)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .common import Initializer, dense_init
+
+__all__ = ["init_mlp", "mlp_specs", "mlp"]
+
+
+def mlp_specs():
+    """Logical-axis specs for :func:`init_mlp` (no allocation)."""
+    return {
+        "w_gate": ("fsdp", "ff"),
+        "w_up": ("fsdp", "ff"),
+        "w_down": ("ff", "fsdp"),
+    }
+
+
+def init_mlp(init: Initializer, d_model: int, d_ff: int):
+    params = {
+        "w_gate": dense_init(init.next(), (d_model, d_ff)),
+        "w_up": dense_init(init.next(), (d_model, d_ff)),
+        "w_down": dense_init(init.next(), (d_ff, d_model)),
+    }
+    return params, mlp_specs()
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))

@@ -1,0 +1,186 @@
+"""Mixture-of-Experts layer: top-k routing, capacity dispatch, EP sharding.
+
+Switch-style capacity-based dispatch (the standard TPU formulation):
+
+  1. router logits → top-k (expert, gate) per token;
+  2. position-in-expert via a cumulative sum over the one-hot assignment;
+     slots beyond capacity ``C = ceil(T·k/E · capacity_factor)`` are dropped
+     (scattered into a dump slot and masked on combine);
+  3. tokens are scattered into an ``(E, C, D)`` buffer — sharded over the
+     ``experts`` logical axis (EP), so GSPMD materializes the all-to-all;
+  4. batched expert SwiGLU; combine = gather + gate-weighted sum.
+
+Routers: "softmax" (OLMoE: softmax → top-k → renormalize) and "sigmoid"
+(DeepSeek-V3: sigmoid scores + bias-free top-k → normalize).  A load-
+balance auxiliary loss (Switch) is returned for training.
+
+A sort-based (ragged) dispatch that avoids the (T·k·E) one-hot cumsum is a
+recorded perf-iteration candidate (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from ..distributed.sharding import constrain
+from .common import Initializer, dense_init
+
+__all__ = ["init_moe", "moe_specs", "moe"]
+
+
+def moe_specs(cfg: ModelConfig):
+    """Logical-axis specs for :func:`init_moe` (no allocation)."""
+    mc = cfg.moe
+    specs = {
+        "router": ("d_model", None),
+        "w_gate": ("experts", "fsdp", "expert_ff"),
+        "w_up": ("experts", "fsdp", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "fsdp"),
+    }
+    if mc.n_shared_experts:
+        specs["shared"] = {
+            "w_gate": ("fsdp", "ff"),
+            "w_up": ("fsdp", "ff"),
+            "w_down": ("ff", "fsdp"),
+        }
+    return specs
+
+
+def init_moe(init: Initializer, cfg: ModelConfig):
+    mc = cfg.moe
+    assert mc is not None
+    d, e, f = cfg.d_model, mc.n_experts, mc.d_ff_expert
+    params = {
+        "router": dense_init(init.next(), (d, e)),
+        "w_gate": dense_init(init.next(), (e, d, f)),
+        "w_up": dense_init(init.next(), (e, d, f)),
+        "w_down": dense_init(init.next(), (e, f, d), in_axis=1),
+    }
+    if mc.n_shared_experts:
+        fs = f * mc.n_shared_experts
+        params["shared"] = {
+            "w_gate": dense_init(init.next(), (d, fs)),
+            "w_up": dense_init(init.next(), (d, fs)),
+            "w_down": dense_init(init.next(), (fs, d)),
+        }
+    return params, moe_specs(cfg)
+
+
+def _route(mc: MoEConfig, logits: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits (T, E) → (gates (T,k), experts (T,k), probs-for-aux (T, E))."""
+    if mc.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits.astype(jnp.float32))
+        gate, idx = jax.lax.top_k(scores, mc.top_k)
+        gate = gate / (gate.sum(-1, keepdims=True) + 1e-20)
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-20)
+    else:
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate, idx = jax.lax.top_k(probs, mc.top_k)
+        gate = gate / (gate.sum(-1, keepdims=True) + 1e-20)
+    return gate, idx, probs
+
+
+def moe(
+    params, cfg: ModelConfig, x: jax.Array, dropless: bool = False
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (y (B, S, D), aux_loss scalar).
+
+    ``dropless=True`` sets capacity = T so no token is ever dropped.  This
+    makes the layer *causally consistent* (each token's output depends only
+    on its own routing, not on batch composition) — required for serving
+    correctness (decode must match the full forward).  Training uses the
+    capacity-factor dispatch, whose (bounded) drops are the standard TPU
+    trade-off.
+    """
+    mc = cfg.moe
+    assert mc is not None
+    B, S, D = x.shape
+    T = B * S
+    E, K = mc.n_experts, mc.top_k
+    dt = x.dtype
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf, params["router"].astype(dt))
+    gate, idx, probs = _route(mc, logits)            # (T,K), (T,K), (T,E)
+
+    # load-balance auxiliary loss (Switch): E · Σ_e frac_tokens_e · frac_prob_e
+    assign1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    aux = E * jnp.mean(assign1.mean(0) * probs.mean(0))
+
+    # dispatch groups: positions are computed *within* a group so the
+    # cumsum has no cross-shard sequential dependency (perf iteration M2,
+    # GShard's "local groups").  G matches the data axis; capacity is
+    # per-group.
+    G = mc.dispatch_groups if (not dropless and T % mc.dispatch_groups == 0) else 1
+    tg = T // G                     # tokens per group
+    if dropless:
+        cap_g = T
+    else:
+        cap_g = max(int(math.ceil(tg * K / E * mc.capacity_factor)), 4)
+    capacity = G * cap_g            # total per-expert slots
+
+    # position of each (token, k) slot within its expert's per-group queue
+    onehot = jax.nn.one_hot(idx.reshape(G, tg * K), E, dtype=jnp.int32)
+    pos_all = jnp.cumsum(onehot, axis=1) - 1                  # (G, tg·K, E)
+    pos = jnp.take_along_axis(
+        pos_all, idx.reshape(G, tg * K, 1), axis=2
+    )[..., 0].reshape(-1)                                     # (T·K,)
+    keep = pos < cap_g
+    e_flat = idx.reshape(-1)
+    pos_c = jnp.where(keep, pos, cap_g)                       # per-group dump
+    g_of = (
+        jnp.repeat(jnp.arange(G, dtype=jnp.int32), tg * K)
+    )                                                         # (T·K,)
+
+    # Dispatch via GATHER (perf iteration M1): a (T·K, D)-sized scatter
+    # into the expert-sharded buffer made GSPMD all-gather a u32[T·K, D]
+    # index tensor (4.3 GB/layer for olmoe@train_4k).  Instead: scatter
+    # only token *ids* into a small int map, then gather rows — the
+    # data-plane collective shrinks to a (T, D) reshard, and the backward
+    # is a (T, D) scatter-add instead of an (E, C, D) scatter.
+    tok_rep = jnp.tile(
+        jnp.repeat(jnp.arange(T, dtype=jnp.int32), K).reshape(T, K), (1, 1)
+    ).reshape(-1)
+    stride = cap_g + 1
+    slot = (
+        e_flat.astype(jnp.int32) * (G * stride)
+        + g_of * stride
+        + pos_c.astype(jnp.int32)
+    )
+    src_map = jnp.full((E * G * stride,), T, jnp.int32)
+    src_map = src_map.at[slot].set(tok_rep, mode="drop")
+    src_map = src_map.reshape(E, G, stride)[:, :, :cap_g].reshape(E, capacity)
+    src_map = constrain(src_map, "experts", None)
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, D), dt)], axis=0)  # dump row
+    h = jnp.take(x_pad, src_map, axis=0)                          # (E, C, D)
+    h = constrain(h, "experts", None, None)
+
+    # batched expert SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"].astype(dt))
+    o = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"].astype(dt))
+    o = constrain(o, "experts", None, None)
+
+    # combine: gather each slot's output, weight by gate, sum over k
+    o_pad = jnp.concatenate([o, jnp.zeros((E, 1, D), dt)], axis=1)
+    col = jnp.where(keep, g_of * cap_g + pos_c, capacity)             # dump col
+    out_slots = o_pad[e_flat, col]                                    # (T*K, D)
+    w = (gate.reshape(-1) * keep.astype(jnp.float32)).astype(dt)
+    y = jax.ops.segment_sum(
+        out_slots * w[:, None], tok_rep, num_segments=T
+    )
+
+    if mc.n_shared_experts:
+        sp = params["shared"]
+        g = jnp.einsum("td,df->tf", xf, sp["w_gate"].astype(dt))
+        u = jnp.einsum("td,df->tf", xf, sp["w_up"].astype(dt))
+        y = y + jnp.einsum(
+            "tf,fd->td", jax.nn.silu(g) * u, sp["w_down"].astype(dt)
+        )
+
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,277 @@
+"""Mamba2 block (state-space duality / SSD), chunked-parallel + recurrent.
+
+Prefill/train use the chunked SSD algorithm (quadratic within a chunk,
+linear across chunks); decode uses the O(1) recurrent update.  The layer
+follows the Mamba2 reference: fused input projection → short causal
+depthwise conv on (x, B, C) → SSD core → gated RMSNorm → output projection.
+
+Head layout: ``d_inner = expand · d_model``; ``n_heads = d_inner / head_dim``;
+state per head is ``(head_dim, d_state)``.  TP shards the head dimension.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .common import Initializer, dense_init
+
+__all__ = [
+    "init_mamba2", "mamba2_specs", "mamba2",
+    "SSMCache", "init_ssm_cache", "mamba2_decode",
+]
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_dim) rolling conv input window
+    state: jax.Array  # (B, H, P, N) SSD state
+
+
+def _dims(cfg: ModelConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    conv_dim = d_inner + 2 * sc.n_groups * sc.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    sc = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, sc.conv_width - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, n_heads, sc.head_dim, sc.d_state), jnp.float32),
+    )
+
+
+def mamba2_specs(cfg: ModelConfig):
+    """Logical-axis specs for :func:`init_mamba2` (no allocation)."""
+    return {
+        "w_in": ("fsdp", "ff"),
+        "conv_w": (None, "ff"),
+        "conv_b": ("ff",),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "dt_bias": ("heads",),
+        "norm_w": ("ff",),
+        "w_out": ("ff", "fsdp"),
+    }
+
+
+def init_mamba2(init: Initializer, cfg: ModelConfig):
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    proj_out = 2 * d_inner + 2 * sc.n_groups * sc.d_state + n_heads
+    params = {
+        "w_in": dense_init(init.next(), (d, proj_out)),
+        "conv_w": 0.1 * jax.random.normal(
+            init.next(), (sc.conv_width, conv_dim), jnp.float32
+        ),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(init.next(), (n_heads,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.expm1(
+                jax.random.uniform(init.next(), (n_heads,), jnp.float32, 1e-3, 0.1)
+            )
+        ),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "w_out": dense_init(init.next(), (d_inner, d)),
+    }
+    return params, mamba2_specs(cfg)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    sc = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    gn = sc.n_groups * sc.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt  # xbc = [x | B | C] pre-conv
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq.  x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k in (j, i]} x[..., k]."""
+    T = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    out = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD core (chunked scan).
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,) negative decay rates;
+    B, C: (b, s, g, n).  Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)   # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]              # (b,nc,q,h) negative
+    dA_cs = jnp.cumsum(dA, axis=2)                 # within-chunk cumsum
+
+    # 1. within-chunk (diagonal blocks): quadratic attention-like form
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))           # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)        # (b,nc,h,q,k)
+    y_diag = jnp.einsum(
+        "bchqk,bchqk,bckh,bckhp->bcqhp",
+        scores, L, dtc, xc,
+    )
+
+    # 2. chunk states: decayed contribution of each chunk's inputs
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # (b,nc,q,h)
+    states = jnp.einsum(
+        "bcqhn,bcqh,bcqh,bcqhp->bchpn", Bh, decay_states, dtc, xc
+    )                                                        # (b,nc,h,p,n)
+
+    # 3. inter-chunk recurrence (scan over chunks, O(nc))
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st_prev = carry                                      # (b,h,p,n)
+        st_c, dec_c = inp                                    # (b,h,p,n), (b,h)
+        new = st_c + dec_c[:, :, None, None] * st_prev
+        return new, st_prev
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,h,p,n)
+
+    # 4. contribution of previous-chunk states to outputs
+    state_decay = jnp.exp(dA_cs)                             # (b,nc,q,h)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, state_decay
+    )
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba2(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache: Optional[SSMCache] = None,
+) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """Full-sequence forward (train / prefill).  x: (B, S, D)."""
+    sc = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    gn = sc.n_groups * sc.d_state
+    dt_ = x.dtype
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dt_))
+    z, xbc, dtr = _split_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xi, B, C = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+
+    b, s = x.shape[:2]
+    xi = xi.reshape(b, s, n_heads, sc.head_dim)
+    B = B.reshape(b, s, sc.n_groups, sc.d_state)
+    C = C.reshape(b, s, sc.n_groups, sc.d_state)
+    dt = jax.nn.softplus(
+        dtr.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )                                                         # (b,s,h)
+    A = -jnp.exp(params["A_log"])                             # (h,) negative
+
+    xi = constrain(xi, "batch", "seq", "heads", None)
+    y, final_state = _ssd_chunked(
+        xi.astype(jnp.float32), dt, A, B.astype(jnp.float32),
+        C.astype(jnp.float32), min(sc.chunk_size, s),
+    )
+    y = y + params["D"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(dt_)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm_w"]).astype(dt_)
+
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dt_))
+    new_cache = None
+    if cache is not None:
+        w = sc.conv_width
+        xbc_raw = _split_proj(cfg, zxbcdt)[1]
+        conv_tail = xbc_raw[:, -(w - 1):, :] if s >= w - 1 else jnp.concatenate(
+            [cache.conv[:, s:, :], xbc_raw], axis=1
+        )
+        new_cache = SSMCache(conv=conv_tail.astype(cache.conv.dtype),
+                             state=final_state.astype(jnp.float32))
+    return out, new_cache
+
+
+def mamba2_decode(
+    params, cfg: ModelConfig, x: jax.Array, cache: SSMCache
+) -> Tuple[jax.Array, SSMCache]:
+    """Single-token recurrent step.  x: (B, 1, D) → (B, 1, D)."""
+    sc = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    gn = sc.n_groups * sc.d_state
+    dt_ = x.dtype
+    b = x.shape[0]
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dt_))
+    z, xbc, dtr = _split_proj(cfg, zxbcdt)                     # (b,1,·)
+
+    # rolling conv window
+    win = jnp.concatenate([cache.conv, xbc], axis=1)           # (b,W,conv_dim)
+    conv_out = (
+        jnp.einsum("bwc,wc->bc", win.astype(jnp.float32), params["conv_w"])
+        + params["conv_b"]
+    )
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(dt_)       # (b,1,·)
+    xi, B, C = jnp.split(xbc1, [d_inner, d_inner + gn], axis=-1)
+    xi = xi.reshape(b, n_heads, sc.head_dim).astype(jnp.float32)
+    B1 = B.reshape(b, sc.n_groups, sc.d_state).astype(jnp.float32)
+    C1 = C.reshape(b, sc.n_groups, sc.d_state).astype(jnp.float32)
+    rep = n_heads // sc.n_groups
+    Bh = jnp.repeat(B1, rep, axis=1)                           # (b,h,n)
+    Ch = jnp.repeat(C1, rep, axis=1)
+    dt1 = jax.nn.softplus(
+        dtr[:, 0, :].astype(jnp.float32) + params["dt_bias"][None, :]
+    )                                                          # (b,h)
+    A = -jnp.exp(params["A_log"])
+
+    decay = jnp.exp(dt1 * A[None, :])                          # (b,h)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt1, Bh, xi)
+    state = cache.state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, state)
+    y = y + params["D"][None, :, None] * xi
+    y = y.reshape(b, 1, d_inner).astype(dt_)
+
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm_w"]).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dt_))
+    new_cache = SSMCache(conv=win[:, 1:, :], state=state)
+    return out, new_cache

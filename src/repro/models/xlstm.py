@@ -1,0 +1,424 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar).
+
+Follows the xLSTM paper (arXiv:2405.04517):
+
+  * **mLSTM** — matrix memory ``C ∈ R^{hd×hd}`` per head with covariance
+    update ``C_t = f_t C_{t-1} + i_t v_t k_t^T``, exponential input gating and
+    a max-stabilizer ``m``.  Training/prefill use the *chunkwise* form
+    (quadratic within a chunk, recurrent across chunks — same structure as
+    Mamba2's SSD, so it shares the sub-quadratic long-context story); decode is
+    the O(1) recurrence.
+  * **sLSTM** — scalar memory per head with exponential gating and
+    block-diagonal recurrent weights; inherently sequential (scanned over
+    time), which is the architecture's stated trade-off.
+
+Block wiring (xLSTM §4): mLSTM uses pre-up-projection (proj factor 2) with a
+causal conv feeding q/k and an output gate from the parallel branch; sLSTM
+uses post-up-projection (GeGLU MLP, factor 4/3).  ``d_ff = 0`` in the config
+because all FFN capacity lives inside the blocks.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .common import Initializer, dense_init, rms_norm
+
+__all__ = [
+    "init_mlstm_block", "mlstm_specs", "mlstm_block",
+    "MLSTMCache", "init_mlstm_cache",
+    "init_slstm_block", "slstm_specs", "slstm_block",
+    "SLSTMCache", "init_slstm_cache",
+]
+
+
+# --------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------- #
+class MLSTMCache(NamedTuple):
+    C: jax.Array     # (B, H, hd, hd) matrix memory
+    n: jax.Array     # (B, H, hd) normalizer state
+    m: jax.Array     # (B, H) max-stabilizer (log domain)
+    conv: jax.Array  # (B, W-1, di) rolling conv window
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    xc = cfg.xlstm
+    di = int(xc.mlstm_proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    hd = di // nh
+    return di, nh, hd
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    xc = cfg.xlstm
+    di, nh, hd = _mlstm_dims(cfg)
+    return MLSTMCache(
+        C=jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, nh, hd), jnp.float32),
+        m=jnp.full((batch, nh), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, xc.conv_width - 1, di), dtype),
+    )
+
+
+def mlstm_specs(cfg: ModelConfig):
+    """Logical-axis specs for :func:`init_mlstm_block` (no allocation)."""
+    return {
+        "norm": ("d_model",),
+        "w_up": ("fsdp", "ff"),
+        "conv_w": (None, "ff"),
+        "conv_b": ("ff",),
+        "w_q": ("fsdp", "ff"),
+        "w_k": ("fsdp", "ff"),
+        "w_v": ("fsdp", "ff"),
+        "w_i": ("fsdp", "heads"),
+        "w_f": ("fsdp", "heads"),
+        "b_i": ("heads",),
+        "b_f": ("heads",),
+        "out_norm": ("ff",),
+        "w_down": ("ff", "fsdp"),
+    }
+
+
+def init_mlstm_block(init: Initializer, cfg: ModelConfig):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    di, nh, hd = _mlstm_dims(cfg)
+    params = {
+        "norm": jnp.ones((d,), jnp.float32),
+        "w_up": dense_init(init.next(), (d, 2 * di)),
+        "conv_w": 0.1 * jax.random.normal(init.next(), (xc.conv_width, di), jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_q": dense_init(init.next(), (di, di)),
+        "w_k": dense_init(init.next(), (di, di)),
+        "w_v": dense_init(init.next(), (di, di)),
+        "w_i": dense_init(init.next(), (di, nh)),
+        "w_f": dense_init(init.next(), (di, nh)),
+        "b_i": jnp.zeros((nh,), jnp.float32),
+        # forget bias init: strongly open (remember) at start, as in the paper
+        "b_f": jnp.linspace(3.0, 6.0, nh).astype(jnp.float32),
+        "out_norm": jnp.ones((di,), jnp.float32),
+        "w_down": dense_init(init.next(), (di, d)),
+    }
+    return params, mlstm_specs(cfg)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq.  x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, state: Tuple, chunk: int):
+    """Chunkwise stabilized mLSTM.
+
+    q/k/v: (B, S, H, hd) f32; log_i/log_f: (B, S, H) f32.
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    Returns (h (B,S,H,hd), final_state).
+    """
+    B, S, H, hd = q.shape
+    nc = S // chunk
+    qc = q.reshape(B, nc, chunk, H, hd).transpose(1, 0, 3, 2, 4)  # (nc,B,H,q,hd)
+    kc = k.reshape(B, nc, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    lic = log_i.reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)   # (nc,B,H,q)
+    lfc = log_f.reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)
+
+    def body(carry, xs):
+        C_prev, n_prev, m_prev = carry
+        qk, kk, vk, li, lf = xs
+        # inclusive within-chunk cumulative log-forget
+        lf_cum = jnp.cumsum(lf, axis=-1)                      # (B,H,q)
+        F = lf_cum[..., -1]                                   # (B,H)
+
+        # intra-chunk decay matrix D[t,s] = lf_cum_t - lf_cum_s + li_s (s ≤ t)
+        D = lf_cum[..., :, None] - lf_cum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri, D, -jnp.inf)                       # (B,H,q,q)
+
+        # per-position stabilizer: max over intra contributions and carry-in
+        b_in = lf_cum + m_prev[..., None]                     # (B,H,q)
+        m_t = jnp.maximum(jnp.max(D, axis=-1), b_in)          # (B,H,q)
+        m_t = jnp.maximum(m_t, -1e30)
+
+        # intra attention-like weights
+        Sw = jnp.exp(D - m_t[..., None])                      # (B,H,q,q)
+        qk_scores = jnp.einsum("bhqd,bhkd->bhqk", qk, kk)     # (B,H,q,q)
+        h_intra = jnp.einsum("bhqk,bhqk,bhkd->bhqd", Sw, qk_scores, vk)
+        n_intra = jnp.einsum("bhqk,bhqk->bhq", Sw, qk_scores)
+
+        # inter-chunk (carry) contribution
+        w_in = jnp.exp(b_in - m_t)                            # (B,H,q)
+        h_inter = jnp.einsum("bhqd,bhde->bhqe", qk, C_prev) * w_in[..., None]
+        n_inter = jnp.einsum("bhqd,bhd->bhq", qk, n_prev) * w_in
+
+        h_num = h_intra + h_inter
+        n_tot = n_intra + n_inter
+        denom = jnp.maximum(jnp.abs(n_tot), jnp.exp(-m_t))    # (B,H,q)
+        h = h_num / denom[..., None]
+
+        # chunk-end state update
+        g = F[..., None] - lf_cum + li                        # (B,H,q) decay to end
+        m_next = jnp.maximum(F + m_prev, jnp.max(g, axis=-1))
+        m_next = jnp.maximum(m_next, -1e30)
+        w_st = jnp.exp(g - m_next[..., None])                 # (B,H,q)
+        C_new = (
+            jnp.exp(F + m_prev - m_next)[..., None, None] * C_prev
+            + jnp.einsum("bhq,bhqd,bhqe->bhde", w_st, kk, vk)
+        )
+        n_new = (
+            jnp.exp(F + m_prev - m_next)[..., None] * n_prev
+            + jnp.einsum("bhq,bhqd->bhd", w_st, kk)
+        )
+        return (C_new, n_new, m_next), h
+
+    final, hs = jax.lax.scan(body, state, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    return h, final
+
+
+def mlstm_block(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache: Optional[MLSTMCache] = None,
+) -> Tuple[jax.Array, Optional[MLSTMCache]]:
+    """Residual mLSTM block.  x: (B, S, D)."""
+    xc = cfg.xlstm
+    di, nh, hd = _mlstm_dims(cfg)
+    dt = x.dtype
+    B, S, _ = x.shape
+
+    h_in = rms_norm(params["norm"], x, cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h_in, params["w_up"].astype(dt))
+    x_m, z = jnp.split(up, 2, axis=-1)                        # (B,S,di) each
+
+    if cache is None:
+        x_conv = jax.nn.silu(_causal_conv(x_m, params["conv_w"], params["conv_b"]))
+        conv_tail = None
+    else:
+        win = jnp.concatenate([cache.conv.astype(dt), x_m], axis=1)
+        x_conv = jax.nn.silu(
+            _causal_conv(win, params["conv_w"], params["conv_b"])[:, -S:, :]
+        )
+        conv_tail = win[:, -(xc.conv_width - 1):, :]
+
+    q = jnp.einsum("bse,ef->bsf", x_conv, params["w_q"].astype(dt))
+    k = jnp.einsum("bse,ef->bsf", x_conv, params["w_k"].astype(dt)) * (hd ** -0.5)
+    v = jnp.einsum("bse,ef->bsf", x_m, params["w_v"].astype(dt))
+    q = constrain(q.reshape(B, S, nh, hd), "batch", "seq", "heads", None)
+    k = constrain(k.reshape(B, S, nh, hd), "batch", "seq", "heads", None)
+    v = constrain(v.reshape(B, S, nh, hd), "batch", "seq", "heads", None)
+
+    log_i = (
+        jnp.einsum("bse,eh->bsh", x_conv, params["w_i"].astype(dt)).astype(jnp.float32)
+        + params["b_i"]
+    )
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", x_conv, params["w_f"].astype(dt)).astype(jnp.float32)
+        + params["b_f"]
+    )
+
+    if cache is None:
+        state = (
+            jnp.zeros((B, nh, hd, hd), jnp.float32),
+            jnp.zeros((B, nh, hd), jnp.float32),
+            jnp.full((B, nh), -1e30, jnp.float32),
+        )
+    else:
+        state = (cache.C, cache.n, cache.m)
+
+    chunk = min(xc.conv_width * 64, S)  # default 256, clipped to S
+    while S % chunk:
+        chunk //= 2
+    h, (C_f, n_f, m_f) = _mlstm_chunked(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_i, log_f, state, chunk,
+    )
+    h = h.reshape(B, S, di).astype(dt)
+
+    # per-head group norm ≈ rms over head dim, then output gate
+    hf = h.astype(jnp.float32).reshape(B, S, nh, hd)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    hf = (hf * jax.lax.rsqrt(var + cfg.norm_eps)).reshape(B, S, di)
+    h = (hf * params["out_norm"]).astype(dt)
+    h = h * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", h, params["w_down"].astype(dt))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = MLSTMCache(C=C_f, n=n_f, m=m_f, conv=conv_tail.astype(cache.conv.dtype))
+    return x + y, new_cache
+
+
+# --------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------- #
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, hd) cell
+    n: jax.Array  # (B, H, hd) normalizer
+    h: jax.Array  # (B, H, hd) hidden (recurrent input)
+    m: jax.Array  # (B, H, hd) stabilizer
+    conv: jax.Array  # (B, W-1, D)
+
+
+def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    return nh, hd
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    xc = cfg.xlstm
+    nh, hd = _slstm_dims(cfg)
+    return SLSTMCache(
+        c=jnp.zeros((batch, nh, hd), jnp.float32),
+        n=jnp.ones((batch, nh, hd), jnp.float32),
+        h=jnp.zeros((batch, nh, hd), jnp.float32),
+        m=jnp.zeros((batch, nh, hd), jnp.float32),
+        conv=jnp.zeros((batch, xc.conv_width - 1, cfg.d_model), dtype),
+    )
+
+
+def slstm_specs(cfg: ModelConfig):
+    """Logical-axis specs for :func:`init_slstm_block` (no allocation)."""
+    return {
+        "norm": ("d_model",), "conv_w": (None, "d_model"), "conv_b": ("d_model",),
+        "w_z": ("fsdp", "d_model"), "w_i": ("fsdp", "d_model"),
+        "w_f": ("fsdp", "d_model"), "w_o": ("fsdp", "d_model"),
+        "r_z": ("heads", None, None), "r_i": ("heads", None, None),
+        "r_f": ("heads", None, None), "r_o": ("heads", None, None),
+        "b_z": ("d_model",), "b_i": ("d_model",), "b_f": ("d_model",),
+        "b_o": ("d_model",), "gn": ("d_model",),
+        "w_up_g": ("fsdp", "ff"), "w_up_v": ("fsdp", "ff"), "w_down": ("ff", "fsdp"),
+    }
+
+
+def init_slstm_block(init: Initializer, cfg: ModelConfig):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    nh, hd = _slstm_dims(cfg)
+    df = int(xc.slstm_proj_factor * d)
+    params = {
+        "norm": jnp.ones((d,), jnp.float32),
+        "conv_w": 0.1 * jax.random.normal(init.next(), (xc.conv_width, d), jnp.float32),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        # input weights for the four gates (z, i, f, o)
+        "w_z": dense_init(init.next(), (d, d)),
+        "w_i": dense_init(init.next(), (d, d)),
+        "w_f": dense_init(init.next(), (d, d)),
+        "w_o": dense_init(init.next(), (d, d)),
+        # block-diagonal recurrent weights per head
+        "r_z": 0.1 * jax.random.normal(init.next(), (nh, hd, hd), jnp.float32),
+        "r_i": 0.1 * jax.random.normal(init.next(), (nh, hd, hd), jnp.float32),
+        "r_f": 0.1 * jax.random.normal(init.next(), (nh, hd, hd), jnp.float32),
+        "r_o": 0.1 * jax.random.normal(init.next(), (nh, hd, hd), jnp.float32),
+        "b_z": jnp.zeros((d,), jnp.float32),
+        "b_i": jnp.zeros((d,), jnp.float32),
+        "b_f": jnp.full((d,), 3.0, jnp.float32),
+        "b_o": jnp.zeros((d,), jnp.float32),
+        "gn": jnp.ones((d,), jnp.float32),
+        # post-up GeGLU MLP (proj factor 4/3)
+        "w_up_g": dense_init(init.next(), (d, df)),
+        "w_up_v": dense_init(init.next(), (d, df)),
+        "w_down": dense_init(init.next(), (df, d)),
+    }
+    return params, slstm_specs(cfg)
+
+
+def _slstm_step(params, nh, hd, state, gates):
+    """One recurrent step.  gates: precomputed input contributions (B, 4, D)."""
+    c, n, h, m = state
+    gz, gi, gf, go = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    B = gz.shape[0]
+
+    def rec(w, hh):  # block-diag recurrent matmul: (B,H,hd) × (H,hd,hd)
+        return jnp.einsum("bhk,hkl->bhl", hh, w)
+
+    z_t = jnp.tanh(gz.reshape(B, nh, hd) + rec(params["r_z"], h))
+    i_pre = gi.reshape(B, nh, hd) + rec(params["r_i"], h)
+    f_pre = gf.reshape(B, nh, hd) + rec(params["r_f"], h)
+    o_t = jax.nn.sigmoid(go.reshape(B, nh, hd) + rec(params["r_o"], h))
+
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z_t
+    n_new = f_s * n + i_s
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache: Optional[SLSTMCache] = None,
+) -> Tuple[jax.Array, Optional[SLSTMCache]]:
+    """Residual sLSTM block (sequential scan over time).  x: (B, S, D)."""
+    xc = cfg.xlstm
+    nh, hd = _slstm_dims(cfg)
+    dt = x.dtype
+    B, S, D = x.shape
+
+    h_in = rms_norm(params["norm"], x, cfg.norm_eps)
+    if cache is None:
+        xc_in = jax.nn.silu(_causal_conv(h_in, params["conv_w"], params["conv_b"]))
+        conv_tail = None
+    else:
+        win = jnp.concatenate([cache.conv.astype(dt), h_in], axis=1)
+        xc_in = jax.nn.silu(
+            _causal_conv(win, params["conv_w"], params["conv_b"])[:, -S:, :]
+        )
+        conv_tail = win[:, -(xc.conv_width - 1):, :]
+
+    # input contributions to the four gates, precomputed for the whole seq
+    gz = jnp.einsum("bsd,de->bse", h_in, params["w_z"].astype(dt)) + params["b_z"].astype(dt)
+    gi = jnp.einsum("bsd,de->bse", xc_in, params["w_i"].astype(dt)) + params["b_i"].astype(dt)
+    gf = jnp.einsum("bsd,de->bse", xc_in, params["w_f"].astype(dt)) + params["b_f"].astype(dt)
+    go = jnp.einsum("bsd,de->bse", h_in, params["w_o"].astype(dt)) + params["b_o"].astype(dt)
+    gates = jnp.stack([gz, gi, gf, go], axis=2).astype(jnp.float32)  # (B,S,4,D)
+
+    if cache is None:
+        state = (
+            jnp.zeros((B, nh, hd), jnp.float32),
+            jnp.ones((B, nh, hd), jnp.float32),
+            jnp.zeros((B, nh, hd), jnp.float32),
+            jnp.zeros((B, nh, hd), jnp.float32),
+        )
+    else:
+        state = (cache.c, cache.n, cache.h, cache.m)
+
+    def body(st, g):
+        return _slstm_step(params, nh, hd, st, g)
+
+    final, hs = jax.lax.scan(body, state, gates.transpose(1, 0, 2, 3))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(dt)
+
+    # group norm over heads
+    hf = h.astype(jnp.float32).reshape(B, S, nh, hd)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    hf = (hf * jax.lax.rsqrt(var + cfg.norm_eps)).reshape(B, S, D)
+    h = (hf * params["gn"]).astype(dt)
+
+    # post-up GeGLU MLP
+    g = jnp.einsum("bsd,df->bsf", h, params["w_up_g"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", h, params["w_up_v"].astype(dt))
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, params["w_down"].astype(dt))
+
+    new_cache = None
+    if cache is not None:
+        c, n, hh, m = final
+        new_cache = SLSTMCache(c=c, n=n, h=hh, m=m, conv=conv_tail.astype(cache.conv.dtype))
+    return x + y, new_cache

@@ -1,0 +1,12 @@
+"""Optimizer substrate (no external NN libraries).
+
+  * :mod:`repro.optim.adamw` — AdamW with fp32 / bf16 / block-quantized-int8
+    moment storage (the int8 mode is what lets the 671B config's optimizer
+    state fit v5e HBM), global-norm clipping, decoupled weight decay.
+  * :mod:`repro.optim.schedule` — linear-warmup + cosine decay.
+"""
+
+from .adamw import (  # noqa: F401
+    AdamWConfig, QTensor, init_opt_state, opt_state_specs, apply_adamw,
+)
+from .schedule import warmup_cosine  # noqa: F401

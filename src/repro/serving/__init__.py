@@ -1,0 +1,4 @@
+"""Serving: LM embedder + streaming similarity self-join service."""
+
+from .embedder import LMEmbedder  # noqa: F401
+from .service import SSSJService, ServiceStats  # noqa: F401

@@ -1,0 +1,50 @@
+"""LM-backed document embedder for the SSSJ service.
+
+Any configured architecture (``--arch``) embeds a batch of token sequences:
+final-layer hidden states are mean-pooled over non-pad positions and
+ℓ2-normalized — unit vectors, the paper's input representation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.lm import init_lm, lm_forward
+
+__all__ = ["LMEmbedder"]
+
+
+class LMEmbedder:
+    def __init__(self, cfg: ModelConfig, params=None, key=None):
+        self.cfg = cfg
+        if params is None:
+            params = init_lm(key if key is not None else jax.random.key(0), cfg)
+        self.params = params
+
+        @jax.jit
+        def _embed(params, tokens, mask):
+            _, _, _, hidden = lm_forward(
+                params, cfg, tokens=tokens, return_hidden=True,
+                compute_dtype=jnp.float32,
+            )
+            m = mask.astype(jnp.float32)[..., None]
+            pooled = (hidden.astype(jnp.float32) * m).sum(1) / jnp.maximum(
+                m.sum(1), 1.0
+            )
+            norm = jnp.linalg.norm(pooled, axis=-1, keepdims=True)
+            return pooled / jnp.maximum(norm, 1e-9)
+
+        self._embed = _embed
+
+    def __call__(self, tokens: np.ndarray, mask: Optional[np.ndarray] = None):
+        tokens = np.asarray(tokens, np.int32)
+        if mask is None:
+            mask = (tokens != 0)
+        out = self._embed(self.params, jnp.asarray(tokens), jnp.asarray(mask))
+        return np.asarray(out)

@@ -1,0 +1,104 @@
+"""SSSJ serving loop: batched requests → embeddings → similar-pair events.
+
+This is the paper's system as a *service*: timestamped documents arrive in
+request batches; each batch is embedded (LM backbone or caller-provided
+vectors), unit-normalized, and joined against the recent-past window; the
+emitted pairs drive near-duplicate grouping (union-find) — application #2 —
+or trend detection (growing groups within the horizon) — application #1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.blocked import BlockedJoinConfig, BlockedStreamJoiner
+
+__all__ = ["SSSJService", "ServiceStats"]
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    n_items: int = 0
+    n_pairs: int = 0
+    n_groups: int = 0
+    window_overflow: int = 0
+
+
+class _UnionFind:
+    def __init__(self) -> None:
+        self.parent: Dict[int, int] = {}
+
+    def find(self, x: int) -> int:
+        p = self.parent.setdefault(x, x)
+        while p != self.parent.get(p, p):
+            self.parent[x] = self.parent[p]
+            p = self.parent[p]
+        return p
+
+    def union(self, a: int, b: int) -> None:
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.parent[max(ra, rb)] = min(ra, rb)
+
+
+class SSSJService:
+    """Streaming near-duplicate / trend service over an embedding stream."""
+
+    def __init__(
+        self,
+        theta: float,
+        lam: float,
+        dim: int,
+        capacity: int = 4096,
+        embed_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        block: int = 64,
+    ) -> None:
+        cfg = BlockedJoinConfig(
+            theta=theta, lam=lam, capacity=capacity, d=dim,
+            block_q=block, block_w=block, chunk_d=min(dim, 128),
+        )
+        self.joiner = BlockedStreamJoiner(cfg)
+        self.embed_fn = embed_fn
+        self.groups = _UnionFind()
+        self.stats = ServiceStats()
+        self._group_members: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------------ #
+    def submit(
+        self,
+        batch: np.ndarray,           # (B, dim) vectors or (B, S) tokens
+        timestamps: np.ndarray,      # (B,)
+    ) -> List[Tuple[int, int, float]]:
+        """Process one request batch; returns the emitted similar pairs
+        (uid_newer, uid_older, decayed_score)."""
+        if self.embed_fn is not None and batch.ndim == 2 and batch.dtype.kind in "iu":
+            vecs = self.embed_fn(batch)
+        else:
+            vecs = np.asarray(batch, np.float32)
+            norms = np.linalg.norm(vecs, axis=1, keepdims=True)
+            vecs = vecs / np.maximum(norms, 1e-9)
+        pairs = self.joiner.push(vecs, np.asarray(timestamps, np.float64))
+        for a, b, _ in pairs:
+            self.groups.union(a, b)
+        self.stats.n_items += vecs.shape[0]
+        self.stats.n_pairs += len(pairs)
+        self.stats.window_overflow = self.joiner.overflow
+        return pairs
+
+    # ------------------------------------------------------------------ #
+    def duplicate_groups(self) -> List[List[int]]:
+        """Connected components of the similar-pair graph (app #2)."""
+        comp: Dict[int, List[int]] = {}
+        for x in self.groups.parent:
+            comp.setdefault(self.groups.find(x), []).append(x)
+        groups = [sorted(v) for v in comp.values() if len(v) > 1]
+        self.stats.n_groups = len(groups)
+        return sorted(groups)
+
+    def trending(self, min_size: int = 3) -> List[List[int]]:
+        """Groups that reached ``min_size`` — the paper's trend-detection
+        application (a burst of mutually-similar items within the horizon)."""
+        return [g for g in self.duplicate_groups() if len(g) >= min_size]

@@ -1,0 +1,4 @@
+"""Training substrate: loss, train-step builder, gradient compression."""
+
+from .loss import cross_entropy_loss  # noqa: F401
+from .step import TrainConfig, build_train_step, init_train_state  # noqa: F401

@@ -1,0 +1,43 @@
+"""Cross-entropy loss with z-loss, safe under a vocab-sharded logits axis.
+
+The logits' vocab axis is sharded over ``model`` (see lm_specs); the
+log-sum-exp below reduces over it, which GSPMD lowers to an all-reduce —
+no full-vocab gather is ever materialized.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cross_entropy_loss"]
+
+
+def cross_entropy_loss(
+    logits: jax.Array,          # (B, S, V)
+    labels: jax.Array,          # (B, S) int32
+    mask: Optional[jax.Array] = None,   # (B, S) 1.0 = count
+    z_loss: float = 1e-4,
+) -> Tuple[jax.Array, dict]:
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]   # (B,S)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = z_loss * jnp.square(lse)
+    per_tok = nll + zl
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (per_tok * mask).sum() / denom
+    acc = ((jnp.argmax(lf, axis=-1) == labels).astype(jnp.float32) * mask).sum() / denom
+    return loss, {
+        "nll": (nll * mask).sum() / denom,
+        "z_loss": (zl * mask).sum() / denom,
+        "accuracy": acc,
+        "tokens": mask.sum(),
+    }

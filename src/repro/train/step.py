@@ -1,0 +1,156 @@
+"""Train-step builder: remat, microbatch gradient accumulation, AdamW.
+
+``build_train_step(model_cfg, train_cfg)`` returns a pure function
+
+    (params, opt_state, batch) → (params, opt_state, metrics)
+
+suitable for ``jax.jit`` with sharded inputs.  Features:
+
+  * mixed precision: fp32 params, bf16 compute (cast at the boundary);
+  * activation remat of every scanned block (``remat=True``);
+  * microbatch gradient accumulation via ``lax.scan`` (grads accumulated in
+    fp32), letting the global batch exceed per-device activation memory;
+  * MoE load-balance aux loss and the DeepSeek-V3 MTP head when configured;
+  * AdamW with fp32/bf16/int8 moments and warmup-cosine schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.lm import init_lm, lm_forward, lm_specs, mtp_logits
+from ..optim.adamw import AdamWConfig, apply_adamw, init_opt_state, opt_state_specs
+from ..optim.schedule import warmup_cosine
+from .loss import cross_entropy_loss
+
+__all__ = ["TrainConfig", "build_train_step", "init_train_state", "train_state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    remat: bool = True
+    microbatches: int = 1
+    aux_weight: float = 0.01      # MoE load-balance loss weight
+    mtp_weight: float = 0.3       # DeepSeek-V3 MTP loss weight
+    z_loss: float = 1e-4
+    compute_dtype: str = "bfloat16"
+
+
+def _dtype(t: TrainConfig):
+    return jnp.bfloat16 if t.compute_dtype == "bfloat16" else jnp.float32
+
+
+def init_train_state(key, model_cfg: ModelConfig, train_cfg: TrainConfig):
+    params = init_lm(key, model_cfg)
+    opt_state = init_opt_state(params, train_cfg.optimizer)
+    return params, opt_state
+
+
+def train_state_specs(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    p = lm_specs(model_cfg)
+    return p, opt_state_specs(p, train_cfg.optimizer)
+
+
+def _loss_fn(params, batch, model_cfg: ModelConfig, t: TrainConfig):
+    dt = _dtype(t)
+    kw: Dict[str, Any] = dict(compute_dtype=dt, remat=t.remat)
+    if model_cfg.input_kind == "embeddings":
+        fwd_in = dict(embeds=batch["embeds"])
+    else:
+        fwd_in = dict(tokens=batch["tokens"])
+    need_hidden = bool(model_cfg.mtp)
+    out = lm_forward(
+        params, model_cfg, **fwd_in, **kw, return_hidden=need_hidden
+    )
+    if need_hidden:
+        logits, aux, _, hidden = out
+    else:
+        logits, aux, _ = out
+    mask = batch.get("mask")
+    loss, metrics = cross_entropy_loss(
+        logits, batch["labels"], mask=mask, z_loss=t.z_loss
+    )
+    total = loss + t.aux_weight * aux
+    metrics["aux_loss"] = aux
+    if need_hidden and not model_cfg.input_kind == "embeddings":
+        # MTP: predict t+2 with [h_t ; Emb(t_{t+1})]; target = labels shifted
+        nxt = batch["labels"]                         # == tokens at t+1
+        logits2 = mtp_logits(params, model_cfg, hidden, nxt, compute_dtype=dt)
+        tgt2 = jnp.concatenate(
+            [batch["labels"][:, 1:], batch["labels"][:, -1:]], axis=1
+        )
+        m2 = jnp.ones_like(tgt2, jnp.float32)
+        m2 = m2.at[:, -1].set(0.0)
+        if mask is not None:
+            m2 = m2 * mask
+        l2, _ = cross_entropy_loss(logits2, tgt2, mask=m2, z_loss=0.0)
+        total = total + t.mtp_weight * l2
+        metrics["mtp_loss"] = l2
+    metrics["loss"] = total
+    return total, metrics
+
+
+def build_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    """Build ``(params, opt_state, batch) → (params, opt_state, metrics)``."""
+    t = train_cfg
+    oc = t.optimizer
+
+    grad_fn = jax.value_and_grad(_loss_fn, has_aux=True)
+
+    def accumulate(params, batch):
+        """Gradient over the whole batch, optionally in microbatches."""
+        if t.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch, model_cfg, t)
+            return grads, metrics
+
+        def split(x):
+            b = x.shape[0]
+            assert b % t.microbatches == 0, (b, t.microbatches)
+            return x.reshape((t.microbatches, b // t.microbatches) + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, mbatch):
+            acc, msum = carry
+            (loss, metrics), grads = grad_fn(params, mbatch, model_cfg, t)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads
+            )
+            msum = jax.tree.map(lambda a, b_: a + b_, msum, metrics)
+            return (acc, msum), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        zmet = {
+            "nll": 0.0, "z_loss": 0.0, "accuracy": 0.0, "tokens": 0.0,
+            "aux_loss": 0.0, "loss": 0.0,
+        }
+        if model_cfg.mtp and model_cfg.input_kind != "embeddings":
+            zmet["mtp_loss"] = 0.0
+        zmet = jax.tree.map(jnp.float32, zmet)
+        (grads, msum), _ = jax.lax.scan(body, (zeros, zmet), mb)
+        inv = 1.0 / t.microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m * inv, msum)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = accumulate(params, batch)
+        lr = warmup_cosine(
+            opt_state["step"], oc.peak_lr, oc.warmup_steps, oc.total_steps,
+            oc.min_lr_ratio,
+        )
+        params, opt_state, opt_metrics = apply_adamw(
+            params, grads, opt_state, oc, lr
+        )
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

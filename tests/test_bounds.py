@@ -1,0 +1,105 @@
+"""Admissibility invariants: every pruning bound must upper-bound the true
+(decayed) similarity it gates — the property that guarantees zero false
+negatives (DESIGN.md §8 item 3)."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.index_l2 import L2FamilyIndex
+from repro.core.similarity import decayed_similarity, time_horizon
+from repro.core.types import StreamItem, make_sparse, sparse_dot, unit_normalize
+
+
+@st.composite
+def _vec(draw, dims=16):
+    nnz = draw(st.integers(1, 6))
+    idx = draw(st.lists(st.integers(0, dims - 1), min_size=nnz, max_size=nnz,
+                        unique=True))
+    vals = draw(st.lists(st.floats(0.05, 1.0), min_size=nnz, max_size=nnz))
+    return unit_normalize(make_sparse(idx, vals))
+
+
+@given(st.lists(_vec(), min_size=2, max_size=20),
+       st.sampled_from([0.5, 0.7, 0.9]))
+@settings(max_examples=40, deadline=None)
+def test_pscore_bounds_prefix_similarity(vecs, theta):
+    """Q[x] (pscore at the indexing boundary) must be ≥ dot(y, x') for every
+    later query y — the CV ps1 bound builds on it (Alg. 4 line 3)."""
+    index = L2FamilyIndex(theta, 0.0, use_ap=False, use_l2=True)
+    items = [StreamItem(i, float(i), v) for i, v in enumerate(vecs)]
+    index.construct(items)
+    for uid, res in index.R.items():
+        prefix = make_sparse(res.indices, res.values)
+        for item in items:
+            if item.uid == uid:
+                continue
+            d = sparse_dot(item.vec, prefix)
+            # ‖x'‖ bound: dot(y, x') ≤ ‖x'‖·‖y‖ = ‖x'‖; pscore stores the
+            # tighter min(b1, b2) just before the boundary
+            assert d <= res.q_pscore + 1e-9 or d < theta, (uid, d, res.q_pscore)
+
+
+@given(_vec(), _vec(), st.sampled_from([0.25, 1.0]),
+       st.floats(0.0, 5.0))
+@settings(max_examples=60, deadline=None)
+def test_l2_suffix_bound_admissible(x, y, lam, dt):
+    """Cauchy–Schwarz on any split point: partial + ‖x_suffix‖·‖y_suffix‖
+    must upper-bound the full dot product (the kernel's chunked bound)."""
+    dims = 16
+    xd = np.zeros(dims)
+    xd[x.indices] = x.values
+    yd = np.zeros(dims)
+    yd[y.indices] = y.values
+    full = float(xd @ yd)
+    for split in (0, 4, 8, 12, 16):
+        partial = float(xd[:split] @ yd[:split])
+        bound = partial + float(
+            np.linalg.norm(xd[split:]) * np.linalg.norm(yd[split:])
+        )
+        assert bound >= full - 1e-9
+        dec = decayed_similarity(full, dt, lam)
+        assert bound * math.exp(-lam * dt) >= dec - 1e-9
+
+
+@given(st.floats(0.05, 0.99), st.floats(0.001, 2.0))
+@settings(max_examples=50, deadline=None)
+def test_horizon_is_tight(theta, lam):
+    """Just inside the horizon a perfect-similarity pair survives; just
+    outside it cannot (the time-filtering theorem, paper §3)."""
+    tau = time_horizon(theta, lam)
+    inside = decayed_similarity(1.0, tau * 0.999, lam)
+    outside = decayed_similarity(1.0, tau * 1.001, lam)
+    assert inside >= theta * 0.99
+    assert outside < theta + 1e-12
+
+
+def test_decayed_max_vector_exact():
+    """m̂^λ lazy maintenance must equal the exhaustive max (paper §5.3)."""
+    from repro.core.index_l2 import _DecayedMax
+
+    rng = np.random.default_rng(0)
+    lam = 0.3
+    dm = _DecayedMax(lam)
+    history = []
+    t = 0.0
+    for _ in range(200):
+        t += float(rng.exponential(0.5))
+        idx = rng.choice(8, size=3, replace=False)
+        vals = rng.random(3) + 0.01
+        v = unit_normalize(make_sparse(idx, vals))
+        item = StreamItem(len(history), t, v)
+        dm.update(item)
+        history.append(item)
+        for j in range(8):
+            want = 0.0
+            for h in history:
+                pos = np.nonzero(h.vec.indices == j)[0]
+                if pos.size:
+                    want = max(
+                        want,
+                        float(h.vec.values[pos[0]]) * math.exp(-lam * (t - h.t)),
+                    )
+            got = dm.value_at(j, t)
+            assert abs(got - want) < 1e-9, (j, got, want)

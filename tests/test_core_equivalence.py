@@ -1,0 +1,112 @@
+"""Every (framework × index) combination must emit the exact pair set of
+the brute-force oracle — the paper's correctness contract (no false
+negatives from any bound, no false positives from any decay placement)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Counters, brute_force_join, join_stream, make_joiner, time_horizon,
+)
+from repro.core.types import StreamItem, make_sparse, unit_normalize
+from repro.data.synth import DATASET_SPECS, StreamSpec, synthetic_stream
+
+COMBOS = [
+    ("MB", "INV"), ("MB", "AP"), ("MB", "L2AP"), ("MB", "L2"),
+    ("STR", "INV"), ("STR", "L2AP"), ("STR", "L2"),
+]
+
+
+def _pairs(items, fw, idx, theta, lam):
+    j = make_joiner(fw, idx, theta, lam)
+    return {p.key() for p in join_stream(j, items)}
+
+
+@pytest.mark.parametrize("fw,idx", COMBOS)
+@pytest.mark.parametrize("theta,lam", [(0.7, 0.05), (0.5, 0.2), (0.9, 0.01)])
+def test_matches_brute_force(fw, idx, theta, lam):
+    spec = StreamSpec("mini", 250, 192, 10.0, "poisson")
+    items = synthetic_stream(spec, seed=3)
+    truth = {p.key() for p in brute_force_join(items, theta, lam)}
+    got = _pairs(items, fw, idx, theta, lam)
+    assert got == truth
+
+
+@pytest.mark.parametrize("name", sorted(DATASET_SPECS))
+def test_all_dataset_characters(name):
+    """One pass per timestamp character (poisson/sequential/bursty)."""
+    base = DATASET_SPECS[name]
+    spec = StreamSpec(base.name, 200, 256, min(base.avg_nnz, 24.0),
+                      base.timestamps)
+    items = synthetic_stream(spec, seed=11)
+    theta, lam = 0.6, 0.1
+    truth = {p.key() for p in brute_force_join(items, theta, lam)}
+    for fw, idx in (("STR", "L2"), ("MB", "L2AP"), ("STR", "INV")):
+        assert _pairs(items, fw, idx, theta, lam) == truth, (fw, idx)
+
+
+@st.composite
+def _stream(draw):
+    n = draw(st.integers(10, 60))
+    dims = draw(st.integers(4, 24))
+    items = []
+    t = 0.0
+    for uid in range(n):
+        nnz = draw(st.integers(1, min(dims, 6)))
+        idx = draw(
+            st.lists(st.integers(0, dims - 1), min_size=nnz, max_size=nnz,
+                     unique=True)
+        )
+        vals = draw(
+            st.lists(st.floats(0.05, 1.0), min_size=nnz, max_size=nnz)
+        )
+        t += draw(st.floats(0.0, 2.0))
+        items.append(StreamItem(uid, t, unit_normalize(make_sparse(idx, vals))))
+    return items
+
+
+@given(_stream(), st.sampled_from([0.5, 0.7, 0.9]),
+       st.sampled_from([0.02, 0.1, 0.5]))
+@settings(max_examples=40, deadline=None)
+def test_property_equivalence(items, theta, lam):
+    truth = {p.key() for p in brute_force_join(items, theta, lam)}
+    for fw, idx in (("STR", "L2"), ("STR", "L2AP"), ("MB", "L2")):
+        assert _pairs(items, fw, idx, theta, lam) == truth, (fw, idx)
+
+
+def test_emitted_scores_correct():
+    """Pairs carry the true decayed similarity, not just membership."""
+    spec = StreamSpec("mini", 120, 128, 8.0, "bursty")
+    items = synthetic_stream(spec, seed=5)
+    theta, lam = 0.6, 0.1
+    truth = {p.key(): p.decayed for p in brute_force_join(items, theta, lam)}
+    j = make_joiner("STR", "L2", theta, lam)
+    for p in join_stream(j, items):
+        assert p.key() in truth
+        assert math.isclose(p.decayed, truth[p.key()], rel_tol=1e-9)
+
+
+def test_horizon_math():
+    assert math.isclose(time_horizon(0.5, 0.1), math.log(2.0) / 0.1)
+    assert time_horizon(1.0, 0.5) == 0.0
+    assert math.isinf(time_horizon(0.5, 0.0))
+    with pytest.raises(ValueError):
+        time_horizon(0.0, 0.1)
+    with pytest.raises(ValueError):
+        time_horizon(0.5, -1.0)
+
+
+def test_counters_track_work():
+    spec = StreamSpec("mini", 150, 128, 10.0, "sequential")
+    items = synthetic_stream(spec, seed=9)
+    c_inv, c_l2 = Counters(), Counters()
+    join_stream(make_joiner("STR", "INV", 0.7, 0.05, counters=c_inv), items)
+    join_stream(make_joiner("STR", "L2", 0.7, 0.05, counters=c_l2), items)
+    # paper claim: L2 prunes ⇒ traverses no more entries than INV, and
+    # indexes no more entries than INV (prefix filtering)
+    assert c_l2.entries_traversed <= c_inv.entries_traversed
+    assert c_l2.entries_indexed <= c_inv.entries_indexed
+    assert c_inv.items_processed == len(items)

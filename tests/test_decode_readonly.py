@@ -1,0 +1,56 @@
+"""Unit tests for the perf-D4 decode path: read-only cache attention must
+equal the materialized decode branch, and the stacked append must place
+tokens correctly."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.models.attention import (
+    AttnCache, attention, attention_decode_readonly, init_attention,
+)
+from repro.models.common import Initializer
+from repro.models.lm import _append_tokens
+
+
+def test_readonly_matches_materialized_decode(rng):
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    params, _ = init_attention(Initializer(jax.random.key(0)), cfg)
+    B, M, L = 2, 16, 3
+    hd = cfg.resolved_head_dim
+    kv = cfg.n_kv_heads
+    cache_len = 7
+    k = jnp.asarray(rng.standard_normal((B, M, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, M, kv, hd)), jnp.float32)
+    # zero out positions >= cache_len (as a real cache would have)
+    mask = (jnp.arange(M) < cache_len)[None, :, None, None]
+    cache = AttnCache(k=k * mask, v=v * mask)
+    x = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+
+    # reference: the materialized decode branch (writes the token, attends)
+    y_ref, _ = attention(params, cfg, x, pos, cache=cache,
+                         cache_len=jnp.int32(cache_len))
+    # read-only two-segment path
+    y_ro, k_new, v_new = attention_decode_readonly(
+        params, cfg, x, pos, cache, jnp.int32(cache_len)
+    )
+    np.testing.assert_allclose(np.asarray(y_ro), np.asarray(y_ref), atol=2e-5)
+    assert k_new.shape == (B, 1, kv, hd)
+
+
+def test_append_tokens_places_all_layers():
+    L, B, M, KV, hd = 3, 2, 8, 2, 4
+    cache = AttnCache(
+        k=jnp.zeros((L, B, M, KV, hd)), v=jnp.zeros((L, B, M, KV, hd))
+    )
+    news = (
+        jnp.arange(L * B * KV * hd, dtype=jnp.float32).reshape(L, B, 1, KV, hd),
+        -jnp.ones((L, B, 1, KV, hd)),
+    )
+    out = _append_tokens(cache, news, jnp.int32(5))
+    np.testing.assert_array_equal(np.asarray(out.k[:, :, 5]),
+                                  np.asarray(news[0][:, :, 0]))
+    assert float(out.k[:, :, :5].sum()) == 0.0
+    assert float(out.v[:, :, 5].sum()) == -L * B * KV * hd

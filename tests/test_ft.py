@@ -1,0 +1,142 @@
+"""Fault tolerance: checkpoint atomicity/roundtrip/resharding, manager
+retention + async, health tracking, elastic planning, exact train resume."""
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ft.checkpoint import list_checkpoints, restore_checkpoint, save_checkpoint
+from repro.ft.health import ElasticPlanner, HeartbeatTracker
+from repro.ft.manager import CheckpointManager
+
+
+def _state(rng):
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+                   "b": jnp.asarray(rng.standard_normal(16), jnp.float32)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_roundtrip(tmp_path, rng):
+    st = _state(rng)
+    p = save_checkpoint(tmp_path, 7, st, extra={"pipeline": {"seed": 1, "step": 7}})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    out, extra, step = restore_checkpoint(p, like)
+    assert step == 7 and extra["pipeline"]["step"] == 7
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_no_partial_dirs(tmp_path, rng):
+    save_checkpoint(tmp_path, 1, _state(rng))
+    save_checkpoint(tmp_path, 2, _state(rng))
+    names = [p.name for p in list_checkpoints(tmp_path)]
+    assert names == ["step_00000001", "step_00000002"]
+    # every listed checkpoint has a complete manifest
+    for p in list_checkpoints(tmp_path):
+        man = json.loads((p / "MANIFEST.json").read_text())
+        for leaf in man["leaves"]:
+            assert (p / leaf["file"]).exists()
+
+
+def test_shape_mismatch_rejected(tmp_path, rng):
+    st = _state(rng)
+    p = save_checkpoint(tmp_path, 3, st)
+    bad = {"params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                      "b": jax.ShapeDtypeStruct((16,), jnp.float32)},
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(ValueError):
+        restore_checkpoint(p, bad)
+
+
+def test_manager_retention_and_async(tmp_path, rng):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(rng))
+    mgr.wait()
+    names = [p.name for p in list_checkpoints(tmp_path)]
+    assert names == ["step_00000003", "step_00000004"]
+    st = _state(rng)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    out = mgr.restore_latest(like)
+    assert out is not None and out[2] == 4
+
+
+def test_resharding_roundtrip(tmp_path, rng):
+    """Save replicated, restore with an explicit (trivial) sharding — the
+    mechanism elastic restart uses; multi-device resharding is covered by
+    the subprocess test in test_distributed.py."""
+    st = {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)}
+    p = save_checkpoint(tmp_path, 1, st)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = {"w": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+    like = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    out, _, _ = restore_checkpoint(p, like, shardings=sh)
+    assert out["w"].sharding == sh["w"]
+
+
+def test_exact_training_resume(tmp_path):
+    """Interrupt + resume reproduces the uninterrupted run: the data
+    pipeline resumes exactly (same batches — bit-identical, tested in
+    test_data.py) and the state round-trips losslessly (f32); trajectories
+    may drift at bf16-compute scale only (XLA re-chooses output layouts
+    after a restore, changing accumulation order)."""
+    from repro.launch.train import run_training
+
+    _, hist_full = run_training(
+        "qwen3-0.6b", smoke=True, steps=8, batch=2, seq=16,
+        ckpt_dir=None, log_every=100,
+    )
+    d1 = str(tmp_path / "ckpt")
+    _, hist_head = run_training(
+        "qwen3-0.6b", smoke=True, steps=4, batch=2, seq=16,
+        ckpt_dir=d1, ckpt_every=4, log_every=100)
+    # pre-interrupt segment is bit-identical
+    np.testing.assert_array_equal(hist_full[:4], hist_head)
+    _, hist_resumed = run_training(
+        "qwen3-0.6b", smoke=True, steps=8, batch=2, seq=16,
+        ckpt_dir=d1, ckpt_every=100, log_every=100,
+    )
+    assert len(hist_resumed) == 4          # resumed from step 4, not 0
+    np.testing.assert_allclose(hist_full[4:], hist_resumed, rtol=1e-2)
+
+
+# --------------------------------------------------------------------- #
+# health / elastic
+# --------------------------------------------------------------------- #
+def test_heartbeat_dead_detection():
+    h = HeartbeatTracker(dead_after_s=10.0)
+    h.record("w0", 5, 100.0)
+    h.record("w1", 5, 105.0)
+    assert h.dead(now=112.0) == ["w0"]
+    assert h.dead(now=106.0) == []
+
+
+def test_straggler_p99_rule():
+    h = HeartbeatTracker(dead_after_s=1e9, lag_factor=3.0)
+    for i in range(20):
+        h.record(f"w{i:02d}", 100, 0.0)
+    h.record("w20", 50, 0.0)   # 50 steps behind a tight fleet
+    assert h.stragglers(now=1.0) == ["w20"]
+    # a uniformly slow fleet has no stragglers
+    h2 = HeartbeatTracker()
+    for i in range(10):
+        h2.record(f"w{i}", 10, 0.0)
+    assert h2.stragglers(now=1.0) == []
+
+
+def test_elastic_planner():
+    p = ElasticPlanner(chips_per_host=4, model_axis=16, data_axis=16)
+    full = p.plan(alive_hosts=128)          # 512 chips = 2 pods
+    assert full.shape == (2, 16, 16) and full.hosts_dropped == 0
+    one = p.plan(alive_hosts=100)           # 400 chips → 1 pod, drop rest
+    assert one.shape == (16, 16) and one.hosts_used == 64
+    small = p.plan(alive_hosts=20)          # 80 chips → (4, 16) mesh
+    assert small.shape == (4, 16)
+    assert p.plan(alive_hosts=0) is None

@@ -1,0 +1,138 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/parameter sweeps in
+interpret mode (kernel bodies execute on CPU)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.sssj_join import sssj_join_scores, suffix_chunk_norms
+from repro.kernels.sssj_join.ref import sssj_join_ref
+
+
+def _unit_rows(rng, n, d, dtype):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return jnp.asarray(x, dtype)
+
+
+# --------------------------------------------------------------------- #
+# sssj_join
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("q_n,w_n,d", [(32, 32, 64), (64, 96, 160),
+                                       (17, 43, 100), (128, 64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sssj_kernel_shapes(q_n, w_n, d, dtype, rng):
+    q = _unit_rows(rng, q_n, d, dtype)
+    w = _unit_rows(rng, w_n, d, dtype)
+    tq = jnp.asarray(np.sort(rng.random(q_n) * 20).astype(np.float32)) + 10.0
+    tw = jnp.asarray(np.sort(rng.random(w_n) * 20).astype(np.float32))
+    uq = jnp.arange(1000, 1000 + q_n, dtype=jnp.int32)
+    uw_np = np.arange(w_n, dtype=np.int32)
+    uw_np[::5] = -1                       # empty ring slots
+    uw = jnp.asarray(uw_np)
+    kw = dict(theta=0.4, lam=0.05, block_q=32, block_w=32, chunk_d=32)
+    s_kern, iters = sssj_join_scores(q, w, tq, tw, uq, uw, **kw)
+    s_ref = sssj_join_ref(
+        q, w, tq.reshape(-1, 1), tw.reshape(-1, 1),
+        uq.reshape(-1, 1), uw.reshape(-1, 1), theta=0.4, lam=0.05,
+    )
+    atol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(s_kern), np.asarray(s_ref), atol=atol)
+    assert iters.min() >= 0
+
+
+@pytest.mark.parametrize("theta,lam", [(0.2, 0.01), (0.6, 0.1), (0.9, 0.5),
+                                       (0.99, 1.0)])
+def test_sssj_kernel_param_sweep(theta, lam, rng):
+    q = _unit_rows(rng, 64, 128, jnp.float32)
+    w = _unit_rows(rng, 64, 128, jnp.float32)
+    tq = jnp.asarray((rng.random(64) * 5).astype(np.float32)) + 5.0
+    tw = jnp.asarray((rng.random(64) * 5).astype(np.float32))
+    uq = jnp.arange(100, 164, dtype=jnp.int32)
+    uw = jnp.arange(64, dtype=jnp.int32)
+    s_k, _ = sssj_join_scores(q, w, tq, tw, uq, uw, theta=theta, lam=lam,
+                              block_q=32, block_w=32, chunk_d=32)
+    s_r = sssj_join_ref(q, w, tq.reshape(-1, 1), tw.reshape(-1, 1),
+                        uq.reshape(-1, 1), uw.reshape(-1, 1),
+                        theta=theta, lam=lam)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-5)
+
+
+def test_sssj_tile_pruning_saves_chunks(rng):
+    """Dead tiles (outside the horizon) must not run their k-loop — the
+    paper's time filtering at tile granularity."""
+    d = 128
+    q = _unit_rows(rng, 32, d, jnp.float32)
+    w = _unit_rows(rng, 32, d, jnp.float32)
+    # window far in the past: every pair outside the horizon
+    tq = jnp.full((32,), 1000.0, jnp.float32)
+    tw = jnp.zeros((32,), jnp.float32)
+    uq = jnp.arange(100, 132, dtype=jnp.int32)
+    uw = jnp.arange(32, dtype=jnp.int32)
+    s, iters = sssj_join_scores(q, w, tq, tw, uq, uw, theta=0.5, lam=0.1,
+                                block_q=32, block_w=32, chunk_d=32)
+    assert int(iters.sum()) == 0            # no d-chunk ever executed
+    assert float(jnp.abs(s).sum()) == 0.0
+
+
+def test_suffix_chunk_norms_definition(rng):
+    x = jnp.asarray(rng.standard_normal((8, 96)).astype(np.float32))
+    out = suffix_chunk_norms(x, 32)
+    xs = np.asarray(x)
+    for k in range(3):
+        want = np.linalg.norm(xs[:, (k + 1) * 32:], axis=1)
+        np.testing.assert_allclose(np.asarray(out[:, k]), want, rtol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,H,Hkv,S,Dh", [
+    (1, 4, 4, 128, 64), (2, 8, 2, 128, 64), (1, 4, 1, 256, 32),
+    (2, 6, 3, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, Hkv, S, Dh, dtype, rng):
+    q = jnp.asarray(rng.standard_normal((B, H, S, Dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, Dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, Dh)), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, sm_scale=Dh ** -0.5, causal=True)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=atol
+    )
+
+
+def test_flash_attention_unaligned_seq(rng):
+    q = jnp.asarray(rng.standard_normal((1, 2, 100, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 100, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 100, 64)), jnp.float32)
+    out = flash_attention(q, k, v, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, sm_scale=64 ** -0.5, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# chunked pure-JAX attention (the model-side memory-bounded path)
+# --------------------------------------------------------------------- #
+def test_chunked_causal_attention_matches_ref(rng):
+    from repro.models.attention import chunked_causal_attention
+
+    B, S, H, KV, hd = 2, 256, 8, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    out = chunked_causal_attention(
+        q, k, v, pos, jnp.arange(S, dtype=jnp.int32), hd ** -0.5,
+        q_chunk=64, kv_chunk=64,
+    )
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), sm_scale=hd ** -0.5, causal=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)

@@ -1,0 +1,66 @@
+"""MB-framework specifics the paper calls out: windows, delayed reporting,
+the 2τ false-positive band removed by ApplyDecay, index rebuild counting."""
+
+import math
+
+import numpy as np
+
+from repro.core import Counters, brute_force_join, join_stream, make_joiner
+from repro.core.minibatch import MiniBatchJoiner, apply_decay
+from repro.core.types import Pair, StreamItem, make_sparse, unit_normalize
+
+
+def _item(uid, t, dims=8):
+    rng = np.random.default_rng(uid)
+    idx = rng.choice(dims, size=3, replace=False)
+    return StreamItem(uid, t, unit_normalize(make_sparse(idx, rng.random(3) + 0.1)))
+
+
+def test_mb_requires_finite_horizon():
+    import pytest
+    with pytest.raises(ValueError):
+        make_joiner("MB", "L2", theta=0.9, lam=0.0)
+
+
+def test_apply_decay_filters_2tau_band():
+    """Identical vectors 1.5τ apart: raw-similar (MB tests them) but the
+    decayed threshold rejects them."""
+    theta, lam = 0.8, 0.5
+    tau = math.log(1 / theta) / lam
+    v = unit_normalize(make_sparse([0, 1], [1.0, 1.0]))
+    t_of = {0: 0.0, 1: 1.5 * tau}
+    raw = [Pair(0, 1, 1.0, 1.0)]
+    out = apply_decay(raw, lam, theta, t_of)
+    assert out == []
+    t_of[1] = 0.5 * tau
+    out = apply_decay(raw, lam, theta, t_of)
+    assert len(out) == 1 and out[0].decayed == math.exp(-lam * 0.5 * tau)
+
+
+def test_mb_rebuild_count_tracks_windows():
+    theta, lam = 0.9, 1.0      # τ = log(1/0.9) ≈ 0.105
+    tau = math.log(1 / theta) / lam
+    c = Counters()
+    j = make_joiner("MB", "L2", theta, lam, counters=c)
+    items = [_item(i, i * tau * 0.9) for i in range(30)]   # ~1 item/window
+    join_stream(j, items)
+    # ~n·0.9 windows ⇒ at least a dozen index rebuilds (MB's overhead, the
+    # reason Table 2 shows MB timing out at small τ)
+    assert c.index_rebuilds >= 10
+
+
+def test_mb_cross_window_pairs_found():
+    theta, lam = 0.8, 0.1
+    tau = math.log(1 / theta) / lam
+    v = unit_normalize(make_sparse([0, 1, 2], [0.5, 0.5, 0.5]))
+    # two identical items in adjacent windows, Δt < τ
+    items = [
+        StreamItem(0, 0.1, v),
+        StreamItem(1, 0.1 + tau * 0.95, v),
+        StreamItem(2, 0.1 + 2.5 * tau, v),    # third beyond horizon of #1
+    ]
+    got = {p.key() for p in join_stream(make_joiner("MB", "L2", theta, lam), items)}
+    truth = {p.key() for p in brute_force_join(items, theta, lam)}
+    assert got == truth
+    assert (0, 1) in got
+    assert (0, 2) not in got

@@ -1,0 +1,166 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, as a
+reduced same-family config, runs one forward and one train step on CPU with
+correct shapes and no NaNs; decode matches the full forward."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cell_enabled
+from repro.models.lm import (
+    init_lm, init_lm_caches, lm_decode_step, lm_forward, lm_specs, make_plan,
+    param_count,
+)
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import TrainConfig, build_train_step, init_train_state
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _batch(cfg, rng, B=2, S=32):
+    if cfg.input_kind == "embeddings":
+        return {
+            "embeds": jnp.asarray(
+                rng.standard_normal((B, S, cfg.d_model)), jnp.float32
+            ),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32
+            ),
+        }
+    t = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    return {"tokens": t, "labels": t}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch, rng):
+    cfg = ARCHS[arch].reduced()
+    params = init_lm(jax.random.key(0), cfg)
+    b = _batch(cfg, rng)
+    kw = ({"embeds": b["embeds"]} if cfg.input_kind == "embeddings"
+          else {"tokens": b["tokens"]})
+    logits, aux, _ = lm_forward(params, cfg, **kw)
+    B, S = b["labels"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    if cfg.moe is not None:
+        assert float(aux) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch, rng):
+    cfg = ARCHS[arch].reduced()
+    tc = TrainConfig(
+        optimizer=AdamWConfig(peak_lr=3e-3, warmup_steps=1, total_steps=50),
+        remat=True, microbatches=2,
+    )
+    params, opt = init_train_state(jax.random.key(0), cfg, tc)
+    step = jax.jit(build_train_step(cfg, tc))
+    b = _batch(cfg, rng, B=4)
+    losses = []
+    for _ in range(4):
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert not any(np.isnan(losses))
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full(arch, rng):
+    cfg = ARCHS[arch].reduced()
+    params = init_lm(jax.random.key(1), cfg)
+    B, S, M = 2, 12, 24
+    b = _batch(cfg, rng, B=B, S=S)
+    if cfg.input_kind == "embeddings":
+        full_kw = {"embeds": b["embeds"]}
+        pre_kw = {"embeds": b["embeds"][:, : S - 1]}
+        dec_kw = {"tokens": None, "embeds": b["embeds"][:, S - 1 : S]}
+    else:
+        full_kw = {"tokens": b["tokens"]}
+        pre_kw = {"tokens": b["tokens"][:, : S - 1]}
+        dec_kw = {"tokens": b["tokens"][:, S - 1 : S]}
+    logits_full, _, _ = lm_forward(
+        params, cfg, compute_dtype=jnp.float32, moe_dropless=True, **full_kw
+    )
+    caches = init_lm_caches(cfg, B, M, dtype=jnp.float32)
+    _, _, caches = lm_forward(
+        params, cfg, caches=caches, cache_len=jnp.int32(0),
+        compute_dtype=jnp.float32, moe_dropless=True, **pre_kw
+    )
+    logits_dec, _ = lm_decode_step(
+        params, cfg, caches=caches, cache_len=jnp.int32(S - 1),
+        compute_dtype=jnp.float32, **dec_kw
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0]), np.asarray(logits_full[:, -1]),
+        atol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_specs_mirror_params(arch):
+    cfg = ARCHS[arch].reduced()
+    params = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.key(0))
+    specs = lm_specs(cfg)
+    is_leaf = lambda s: isinstance(s, tuple) and all(
+        isinstance(x, (str, type(None))) for x in s
+    )
+    pt = jax.tree.structure(params)
+    st_ = jax.tree.structure(specs, is_leaf=is_leaf)
+    assert pt == st_
+    # every spec leaf's length matches its array's rank
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.flatten(specs, is_leaf=is_leaf)[0]
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) == len(p.shape), (s, p.shape)
+
+
+def test_full_config_dims_exact():
+    """The registry must carry the assignment's exact numbers."""
+    c = ARCHS["deepseek-v3-671b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == (61, 7168, 128, 129_280)
+    assert c.moe.n_experts == 256 and c.moe.top_k == 8
+    c = ARCHS["qwen3-0.6b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == (28, 1024, 16, 8, 3072)
+    assert c.vocab_size == 151_936 and c.qk_norm
+    c = ARCHS["zamba2-2.7b"]
+    assert (c.n_layers, c.d_model, c.ssm.d_state) == (54, 2560, 64)
+    c = ARCHS["xlstm-350m"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff) == (24, 1024, 4, 0)
+    c = ARCHS["deepseek-coder-33b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == (62, 7168, 56, 8, 19_200)
+    c = ARCHS["chameleon-34b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == (48, 8192, 64, 65_536)
+    c = ARCHS["musicgen-medium"]
+    assert (c.n_layers, c.d_model, c.vocab_size) == (48, 1536, 2048)
+    c = ARCHS["olmoe-1b-7b"]
+    assert (c.moe.n_experts, c.moe.top_k, c.d_ff) == (64, 8, 1024)
+    c = ARCHS["qwen2.5-3b"]
+    assert (c.n_layers, c.n_kv_heads, c.d_ff) == (36, 2, 11_008) and c.qkv_bias
+    c = ARCHS["codeqwen1.5-7b"]
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (32, 4096, 13_440, 92_416)
+
+
+def test_cell_grid_counts():
+    cells = [(c.name, s.name, ok) for c, s, ok, _ in
+             __import__("repro.configs", fromlist=["cells"]).cells()]
+    assert len(cells) == 40
+    skips = [c for c in cells if not c[2]]
+    # long_500k skipped for the 8 non-subquadratic archs
+    assert len(skips) == 8
+    assert all(s[1] == "long_500k" for s in skips)
+    enabled_long = [c for c in cells if c[1] == "long_500k" and c[2]]
+    assert {c[0] for c in enabled_long} == {"zamba2-2.7b", "xlstm-350m"}
+
+
+def test_plan_layer_counts():
+    """Scan-group plans must cover exactly n_layers for every arch."""
+    for name, cfg in ARCHS.items():
+        plan = make_plan(cfg)
+        if cfg.xlstm is not None:
+            total = sum(g.count * cfg.xlstm.slstm_every for g in plan)
+        elif cfg.hybrid is not None:
+            total = sum(g.count * cfg.hybrid.shared_every for g in plan)
+        else:
+            total = sum(g.count for g in plan)
+        assert total == cfg.n_layers, name

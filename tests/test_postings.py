@@ -1,0 +1,78 @@
+"""Posting-list mechanics: O(1) head truncation, compaction, unordered
+filtering (the paper's §6.2 circular-buffer behavior)."""
+
+import numpy as np
+
+from repro.core.postings import ItemMeta, PostingList, ScoreAccumulator
+
+
+def test_append_and_active():
+    pl = PostingList()
+    for i in range(100):
+        pl.append(i, i * 0.1, i * 0.01, float(i))
+    ids, vals, pnorms, ts = pl.active()
+    assert len(pl) == 100
+    np.testing.assert_array_equal(ids, np.arange(100))
+    assert np.allclose(ts, np.arange(100.0))
+
+
+def test_truncate_ordered():
+    pl = PostingList()
+    for i in range(50):
+        pl.append(i, 1.0, 0.0, float(i))
+    pruned = pl.truncate_before_time(20.0)
+    assert pruned == 20
+    ids, _, _, ts = pl.active()
+    assert ids[0] == 20 and ts.min() == 20.0
+    # truncating everything resets to empty
+    assert pl.truncate_before_time(1e9) == 30
+    assert len(pl) == 0
+    # reusable after reset
+    pl.append(99, 1.0, 0.0, 99.0)
+    assert len(pl) == 1
+
+
+def test_truncate_is_amortized_o1():
+    """Head advance must not copy: repeated appends + truncations stay
+    linear (regression guard for the compaction threshold)."""
+    pl = PostingList()
+    t = 0.0
+    for _ in range(2000):
+        t += 1.0
+        pl.append(int(t), 1.0, 0.0, t)
+        pl.truncate_before_time(t - 10.0)
+        assert len(pl) <= 11
+
+
+def test_filter_unordered():
+    pl = PostingList()
+    ts = [5.0, 1.0, 9.0, 3.0, 7.0]   # out of order (re-indexing case)
+    for i, t in enumerate(ts):
+        pl.append(i, float(i), 0.0, t)
+    pruned = pl.filter_expired_unordered(4.0)
+    assert pruned == 2
+    ids, _, _, t_out = pl.active()
+    assert set(ids.tolist()) == {0, 2, 4}
+    assert (t_out >= 4.0).all()
+
+
+def test_item_meta_rebase():
+    m = ItemMeta()
+    for uid in range(10):
+        m.add(uid, float(uid), uid + 1, 0.5)
+    m.rebase(6)
+    t, nnz, vm = m.lookup(np.array([6, 9]))
+    assert t.tolist() == [6.0, 9.0]
+    assert nnz.tolist() == [7, 10]
+    m.rebase(100)   # rebase past the end empties it
+    assert m.n == 0
+
+
+def test_score_accumulator_kill_semantics():
+    acc = ScoreAccumulator(base=0, span=8)
+    acc.score[2] = 0.5
+    acc.score[3] = 0.4
+    acc.killed[3] = True
+    acc.touched.append(np.array([2, 3]))
+    cands = acc.candidates()
+    assert cands.tolist() == [2]

@@ -1,0 +1,69 @@
+"""Serving: embedder produces unit vectors; service finds planted
+near-duplicates and trends."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.serving.embedder import LMEmbedder
+from repro.serving.service import SSSJService
+
+
+@pytest.fixture(scope="module")
+def embedder():
+    return LMEmbedder(ARCHS["qwen3-0.6b"].reduced(), key=jax.random.key(0))
+
+
+def test_embedder_unit_norm(embedder, rng):
+    toks = rng.integers(1, 500, (4, 32)).astype(np.int32)
+    e = embedder(toks)
+    assert e.shape == (4, 64)
+    np.testing.assert_allclose(np.linalg.norm(e, axis=1), 1.0, atol=1e-5)
+
+
+def test_embedder_near_dup_similarity(embedder):
+    """Averaged over trials, near-duplicates embed closer than unrelated
+    documents (an untrained reduced model is noisy per-instance)."""
+    r = np.random.default_rng(42)
+    near_sims, far_sims = [], []
+    for _ in range(8):
+        base = r.integers(1, 500, (1, 64)).astype(np.int32)
+        near = base.copy()
+        near[0, -2:] = r.integers(1, 500, 2)
+        far = r.integers(1, 500, (1, 64)).astype(np.int32)
+        e = embedder(np.concatenate([base, near, far]))
+        near_sims.append(float(e[0] @ e[1]))
+        far_sims.append(float(e[0] @ e[2]))
+    assert np.mean(near_sims) > np.mean(far_sims)
+
+
+def test_service_end_to_end(embedder, rng):
+    service = SSSJService(theta=0.9, lam=0.1, dim=64, embed_fn=embedder)
+    base = rng.integers(1, 500, (64,)).astype(np.int32)
+    batches = []
+    for r in range(4):
+        b = rng.integers(1, 500, (8, 64)).astype(np.int32)
+        b[0] = base          # plant one copy per request batch
+        batches.append(b)
+    t = 0.0
+    for b in batches:
+        service.submit(b, t + np.arange(8) * 0.01)
+        t += 0.5
+    groups = service.duplicate_groups()
+    assert groups, "planted duplicates not found"
+    planted_uids = {r * 8 for r in range(4)}
+    big = max(groups, key=len)
+    assert planted_uids.issubset(set(big))
+    trends = service.trending(min_size=3)
+    assert trends and set(big) in [set(t_) for t_ in trends]
+
+
+def test_service_respects_horizon():
+    service = SSSJService(theta=0.9, lam=1.0, dim=32)   # τ = log(1/.9) ≈ 0.105
+    v = np.ones((1, 32), np.float32)
+    service.submit(v, np.array([0.0]))
+    pairs = service.submit(v, np.array([10.0]))         # far outside horizon
+    assert pairs == []
+    pairs = service.submit(v, np.array([10.01]))        # inside
+    assert len(pairs) == 1

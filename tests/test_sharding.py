@@ -1,0 +1,54 @@
+"""Logical-axis sharding rules: divisibility fallback, missing-axis drop,
+cross-dim conflict resolution."""
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import AxisRules, DEFAULT_RULES, resolve_pspec
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def test_divisibility_fallback():
+    mesh = _mesh1()
+    rules = AxisRules(table={"heads": ("model",), "ff": ("model",)})
+    # model axis size 1 ⇒ always replicate
+    assert resolve_pspec((56, 64), ("heads", "ff"), rules, mesh) == P(None, None)
+
+
+def test_missing_axis_dropped():
+    mesh = _mesh1()  # no 'pod' axis
+    rules = AxisRules(table={"batch": ("pod", "data")})
+    spec = resolve_pspec((8,), ("batch",), rules, mesh)
+    # pod missing → only data considered; size 1 → replicated
+    assert spec == P(None)
+
+
+def test_cross_dim_conflict_first_wins():
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((2, 4))
+
+    rules = AxisRules(table={"kv_seq": ("model",), "kv_heads": ("model",)})
+    spec = resolve_pspec((32, 8), ("kv_seq", "kv_heads"), rules, FakeMesh())
+    assert spec == P("model", None)     # second claim of 'model' dropped
+
+
+def test_indivisible_replicates():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    rules = DEFAULT_RULES
+    # 56 heads over model=16 → replicate; 3072 ff over 16 → shard
+    spec = resolve_pspec((4096, 56, 128), ("fsdp", "heads", "head_dim"),
+                         rules, FakeMesh())
+    assert spec == P("data", None, None)
+    spec = resolve_pspec((1024, 3072), ("fsdp", "ff"), rules, FakeMesh())
+    assert spec == P("data", "model")
