@@ -15,8 +15,9 @@ import sys
 import time
 
 from . import (
-    fig2_entries_ratio, fig34_mb_vs_str, fig56_indexes, fig789_params,
-    kernel_bench, roofline_table, table2_completion, tile_pruning,
+    engine_throughput, fig2_entries_ratio, fig34_mb_vs_str, fig56_indexes,
+    fig789_params, kernel_bench, roofline_table, table2_completion,
+    tile_pruning,
 )
 
 MODULES = [
@@ -27,6 +28,7 @@ MODULES = [
     ("fig789_params", fig789_params),
     ("tile_pruning", tile_pruning),
     ("kernel_bench", kernel_bench),
+    ("engine_throughput", engine_throughput),
     ("roofline_table", roofline_table),
 ]
 

@@ -21,6 +21,11 @@ service, groups, trends = run_service(
 
 assert service.stats.n_items == 24 * 16
 assert groups, "expected the planted near-duplicates to form groups"
+# the join runs on the device-resident engine: compacted emission only
+assert service.stats.pairs_dropped == 0
+assert service.stats.bytes_to_host < service.engine.bytes_dense_equiv
 print(f"\n✓ service processed {service.stats.n_items} documents, "
       f"found {len(groups)} duplicate groups "
-      f"(largest: {max(len(g) for g in groups)})")
+      f"(largest: {max(len(g) for g in groups)}); "
+      f"{service.stats.bytes_to_host} B drained "
+      f"(dense path would have moved {service.engine.bytes_dense_equiv} B)")

@@ -70,4 +70,13 @@ for g in trends:
     assert len(topics_in_group) == 1 and -1 not in topics_in_group
 
 assert len(trends) == 3, f"expected 3 planted trends, got {len(trends)}"
+
+# the service rides the device-resident engine: emission reaches the host
+# as compacted pair buffers, not dense (B, capacity) score matrices
+es = service.engine.stats()
+assert es["pairs_dropped"] == 0, "max_pairs undersized for this stream"
+assert es["bytes_to_host"] < es["bytes_dense_equiv"]
+print(f"host↔device: {es['bytes_to_host']} B compacted "
+      f"vs {es['bytes_dense_equiv']} B dense-equivalent "
+      f"({es['bytes_dense_equiv'] / max(es['bytes_to_host'], 1):.1f}× saved)")
 print("✓ three planted bursts detected, none merged across the horizon")

@@ -1,56 +1,32 @@
-"""TPU-native blocked SSSJ engine: ring-buffer window + kernel join.
+"""Compatibility wrapper over the device-resident engine (repro.engine).
 
-This is the production (dense) counterpart of the faithful STR-L2
-implementation.  The time-filtered index becomes a fixed-capacity ring
-buffer of the most recent vectors (the paper's circular-buffer posting
-lists, §6.2, turned into a device array); candidate generation + pruning
-happen inside the Pallas kernel (:mod:`repro.kernels.sssj_join`), which
-applies time filtering and the ℓ2 suffix bound at tile granularity.
+This module used to host the TPU-native blocked join driver; the hot path
+now lives in :mod:`repro.engine` — the ring-buffer window carried through a
+``lax.scan``, on-device pair compaction, and an async host drain.  What
+remains here is the original public surface, preserved for existing
+callers and tests:
 
-Semantics match the faithful core: for each incoming batch the engine
-reports (a) pairs between batch items and strictly-earlier window items and
-(b) pairs within the batch (uid-ordered), all thresholded on the decayed
-similarity.  Eviction is implicit: ring overwrite drops the oldest items,
-which the time filter justifies as long as ``capacity ≥ arrival_rate · τ``;
-an overflow counter records when live items (still within the horizon) were
-overwritten, so operators can size the window.
+  * :class:`WindowState` / :func:`init_window` / :func:`push_batch` —
+    re-exported from :mod:`repro.engine.window`;
+  * :class:`BlockedJoinConfig` — the historical config dataclass, mapped
+    onto :class:`repro.engine.EngineConfig`;
+  * :class:`BlockedStreamJoiner` — the synchronous push-and-extract driver,
+    now a thin facade: each ``push`` runs the engine's scan step and drains
+    the compacted buffers immediately (callers that want pipelining should
+    use :class:`repro.engine.StreamEngine` directly).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.sssj_join import sssj_join_scores
+from ..engine.engine import EngineConfig, StreamEngine
+from ..engine.window import WindowState, init_window, push_batch  # noqa: F401
 from .similarity import time_horizon
 
 __all__ = ["WindowState", "init_window", "BlockedJoinConfig", "BlockedStreamJoiner"]
-
-_EMPTY_T = jnp.float32(3.0e30)
-
-
-class WindowState(NamedTuple):
-    """Sharded ring buffer of recent stream items (a pytree)."""
-
-    vecs: jax.Array    # (capacity, d) f32
-    ts: jax.Array      # (capacity,) f32; empty slots hold +3e30
-    uids: jax.Array    # (capacity,) i32; empty slots hold -1
-    cursor: jax.Array  # () i32 — next write slot
-    overflow: jax.Array  # () i32 — live items overwritten (window undersized)
-
-
-def init_window(capacity: int, d: int, dtype=jnp.float32) -> WindowState:
-    return WindowState(
-        vecs=jnp.zeros((capacity, d), dtype),
-        ts=jnp.full((capacity,), _EMPTY_T, jnp.float32),
-        uids=jnp.full((capacity,), -1, jnp.int32),
-        cursor=jnp.zeros((), jnp.int32),
-        overflow=jnp.zeros((), jnp.int32),
-    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,102 +39,63 @@ class BlockedJoinConfig:
     block_w: int = 128
     chunk_d: int = 128
     use_ref: bool = False  # route through the jnp oracle instead of Pallas
+    max_pairs: int = 4096  # compacted-emission capacity per micro-batch
 
     @property
     def tau(self) -> float:
         return time_horizon(self.theta, self.lam)
 
-
-def push_batch(
-    state: WindowState, q: jax.Array, tq: jax.Array, uq: jax.Array
-) -> WindowState:
-    cap = state.ts.shape[0]
-    b = q.shape[0]
-    pos = (state.cursor + jnp.arange(b, dtype=jnp.int32)) % cap
-    return state._replace(
-        vecs=state.vecs.at[pos].set(q.astype(state.vecs.dtype)),
-        ts=state.ts.at[pos].set(tq.astype(jnp.float32)),
-        uids=state.uids.at[pos].set(uq.astype(jnp.int32)),
-        cursor=(state.cursor + b) % cap,
-    )
-
-
-def make_join_step(cfg: BlockedJoinConfig):
-    """Build the jitted step:  (state, q, tq, uq) → (state, outputs).
-
-    Outputs:
-      ``scores_win``  (B, capacity) — decayed scores vs window (≥ θ else 0)
-      ``scores_self`` (B, B)        — decayed scores within the batch
-      ``iters_win``   per-tile d-chunk counts (pruning telemetry)
-    """
-
-    kw = dict(
-        theta=cfg.theta,
-        lam=cfg.lam,
-        block_q=cfg.block_q,
-        block_w=cfg.block_w,
-        chunk_d=cfg.chunk_d,
-        use_ref=cfg.use_ref,
-    )
-
-    def step(state: WindowState, q, tq, uq):
-        tq = tq.astype(jnp.float32)
-        uq = uq.astype(jnp.int32)
-        scores_win, iters_win = sssj_join_scores(
-            q, state.vecs, tq, state.ts, uq, state.uids, **kw
+    def to_engine(self, micro_batch: int | None = None) -> EngineConfig:
+        return EngineConfig(
+            theta=self.theta, lam=self.lam, capacity=self.capacity, d=self.d,
+            micro_batch=micro_batch or self.block_q, max_pairs=self.max_pairs,
+            block_q=self.block_q, block_w=self.block_w, chunk_d=self.chunk_d,
+            use_ref=self.use_ref,
         )
-        scores_self, _ = sssj_join_scores(q, q, tq, tq, uq, uq, **kw)
-        # overflow: live slots (uid >= 0, within horizon of newest arrival)
-        # that this push will overwrite
-        cap = state.ts.shape[0]
-        b = q.shape[0]
-        pos = (state.cursor + jnp.arange(b, dtype=jnp.int32)) % cap
-        old_t = state.ts[pos]
-        old_u = state.uids[pos]
-        live = (old_u >= 0) & (tq.max() - old_t <= cfg.tau)
-        n_over = jnp.sum(live.astype(jnp.int32))
-        new_state = push_batch(state, q, tq, uq)
-        new_state = new_state._replace(overflow=state.overflow + n_over)
-        return new_state, (scores_win, scores_self, iters_win)
-
-    return jax.jit(step, donate_argnums=(0,))
 
 
 class BlockedStreamJoiner:
-    """Host driver: feeds batches through the jitted join step and extracts
-    emitted pairs (uid_a, uid_b, decayed_score) as NumPy arrays."""
+    """Synchronous facade: feeds batches through the engine and returns the
+    emitted pairs (uid_a, uid_b, decayed_score) of each push immediately.
+
+    The pre-engine driver was lossless (it fetched the dense score matrix),
+    so this wrapper refuses to drop pairs silently: if a push overflows the
+    compacted buffer it raises instead of returning a truncated list —
+    raise ``cfg.max_pairs`` (bounded by ``micro_batch·(capacity +
+    micro_batch)``) or use :class:`repro.engine.StreamEngine` directly and
+    handle ``pairs_dropped``.
+    """
 
     def __init__(self, cfg: BlockedJoinConfig) -> None:
         self.cfg = cfg
-        self.state = init_window(cfg.capacity, cfg.d)
-        self._step = make_join_step(cfg)
-        self._next_uid = 0
-        self.chunks_executed = 0
-        self.tiles_total = 0
+        self.engine = StreamEngine(cfg.to_engine())
 
     def push(self, vecs: np.ndarray, ts: np.ndarray):
-        b = vecs.shape[0]
-        uq = np.arange(self._next_uid, self._next_uid + b, dtype=np.int32)
-        # snapshot window uids BEFORE the step (donated buffers)
-        w_uids = np.asarray(self.state.uids)
-        self._next_uid += b
-        self.state, (s_win, s_self, it_win) = self._step(
-            self.state, jnp.asarray(vecs), jnp.asarray(ts), jnp.asarray(uq)
-        )
-        s_win = np.asarray(s_win)
-        s_self = np.asarray(s_self)
-        it = np.asarray(it_win)
-        self.chunks_executed += int(it.sum())
-        self.tiles_total += int(it.size)
-        pairs = []
-        qi, wi = np.nonzero(s_win)
-        for a, b_ in zip(qi, wi):
-            pairs.append((int(uq[a]), int(w_uids[b_]), float(s_win[a, b_])))
-        qi, qj = np.nonzero(s_self)
-        for a, b_ in zip(qi, qj):
-            pairs.append((int(uq[a]), int(uq[b_]), float(s_self[a, b_])))
-        return pairs
+        before = self.engine.pairs_dropped
+        self.engine.push(vecs, ts)
+        dropped = self.engine.pairs_dropped - before
+        if dropped:
+            # raise before draining: the surviving pairs stay queued, so a
+            # caller that catches can still recover them via engine.drain_*
+            raise RuntimeError(
+                f"emission overflow: {dropped} pairs dropped (max_pairs="
+                f"{self.cfg.max_pairs} per micro-batch); raise "
+                f"BlockedJoinConfig.max_pairs or switch to StreamEngine"
+            )
+        return self.engine.drain_pairs()
+
+    @property
+    def state(self) -> WindowState:
+        return self.engine.state
 
     @property
     def overflow(self) -> int:
-        return int(np.asarray(self.state.overflow))
+        return self.engine.overflow
+
+    @property
+    def chunks_executed(self) -> int:
+        return self.engine.stats()["chunks_executed"]
+
+    @property
+    def tiles_total(self) -> int:
+        return self.engine.stats()["tiles_total"]

@@ -22,13 +22,12 @@ memory wall (its failure mode in the paper's Table 2).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..distributed.sharding import shard_map
 from ..kernels.sssj_join import sssj_join_scores
 from .blocked import BlockedJoinConfig, WindowState, init_window, push_batch
 
@@ -72,9 +71,10 @@ def make_distributed_join_step(cfg: DistributedJoinConfig, mesh: Mesh):
         chunk_d=b.chunk_d, use_ref=b.use_ref,
     )
 
+    p = mesh.shape[axis]
+
     def local_step(state: WindowState, q, tq, uq):
         # shapes here are per-shard: q (Bl, d); window (Wl, d)
-        p = jax.lax.axis_size(axis)
         me = jax.lax.axis_index(axis)
         perm = [(i, (i + 1) % p) for i in range(p)]
         wl = state.vecs.shape[0]
@@ -123,7 +123,7 @@ def make_distributed_join_step(cfg: DistributedJoinConfig, mesh: Mesh):
     state_specs = WindowState(
         vecs=P(axis, None), ts=P(axis), uids=P(axis), cursor=P(axis), overflow=P(axis)
     )
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         local_step,
         mesh=mesh,
         in_specs=(state_specs, P(axis, None), P(axis), P(axis)),

@@ -13,8 +13,8 @@
     similarity self-join; near-duplicates within the time horizon are
     dropped *before batching* and replaced by fresh samples.
 
-The dedup stage runs the TPU-native engine (blocked join) so the same code
-path scales from this CPU container to the sharded ring join.
+The dedup stage runs the device-resident engine (repro.engine) so the same
+code path scales from this CPU container to the sharded fan-out.
 """
 
 from __future__ import annotations
@@ -24,7 +24,7 @@ from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
-from ..core.blocked import BlockedJoinConfig, BlockedStreamJoiner
+from ..engine.engine import EngineConfig, StreamEngine
 
 __all__ = ["TokenPipeline", "DedupFilter", "hashing_embed"]
 
@@ -52,7 +52,16 @@ def hashing_embed(tokens: np.ndarray, dim: int, seed: int = 17) -> np.ndarray:
 
 class DedupFilter:
     """Streaming near-duplicate filter over document embeddings (paper §1,
-    application #2), backed by the blocked SSSJ engine."""
+    application #2), backed by the device-resident SSSJ engine.
+
+    ``max_pairs`` is sized to the lossless bound ``block·(capacity+block)``
+    — a correct keep-mask needs *every* pair (a dropped pair could be a
+    row's only duplicate evidence), so emission must never truncate here.
+    At this bound the compacted buffers can exceed the dense matrices they
+    replace (the filter trades the engine's bandwidth win for a loss-proof
+    mask); the planned per-row match-mask emission (ROADMAP) restores
+    O(B) traffic for this consumer.
+    """
 
     def __init__(
         self,
@@ -62,11 +71,12 @@ class DedupFilter:
         capacity: int = 2048,
         block: int = 64,
     ) -> None:
-        self.cfg = BlockedJoinConfig(
+        self.cfg = EngineConfig(
             theta=theta, lam=lam, capacity=capacity, d=dim,
+            micro_batch=block, max_pairs=block * (capacity + block),
             block_q=block, block_w=block, chunk_d=min(dim, 128),
         )
-        self.joiner = BlockedStreamJoiner(self.cfg)
+        self.engine = StreamEngine(self.cfg)
         self.dim = dim
         self.n_seen = 0
         self.n_dropped = 0
@@ -74,14 +84,13 @@ class DedupFilter:
     def filter(self, tokens: np.ndarray, ts: np.ndarray) -> np.ndarray:
         """Returns a boolean keep-mask for the batch of documents."""
         emb = hashing_embed(tokens, self.dim)
-        base_uid = self.joiner._next_uid
-        pairs = self.joiner.push(emb, ts)
+        uids = self.engine.push(emb, ts)
+        ua, ub, _ = self.engine.drain_arrays()
+        # drop the *newer* item of each similar pair (uid_a is the newer one)
+        newer = np.maximum(ua, ub) - int(uids[0])
+        newer = newer[(newer >= 0) & (newer < tokens.shape[0])]
         keep = np.ones(tokens.shape[0], bool)
-        for a, b, _ in pairs:
-            # drop the *newer* item of each similar pair
-            newer = max(a, b) - base_uid
-            if 0 <= newer < keep.shape[0]:
-                keep[newer] = False
+        keep[newer] = False
         self.n_seen += tokens.shape[0]
         self.n_dropped += int((~keep).sum())
         return keep

@@ -5,5 +5,6 @@ from .sharding import (  # noqa: F401
     constrain,
     resolve_pspec,
     param_shardings,
+    shard_map,
     use_rules,
 )

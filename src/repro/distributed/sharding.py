@@ -22,6 +22,21 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax ≥ 0.6 exposes shard_map at the top level
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x: experimental module, check_rep spelling
+    import functools
+
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_exp(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )
+
+    functools.update_wrapper(shard_map, _shard_map_exp)
+
 __all__ = [
     "AxisRules",
     "DEFAULT_RULES",
@@ -30,6 +45,7 @@ __all__ = [
     "constrain",
     "resolve_pspec",
     "param_shardings",
+    "shard_map",
 ]
 
 MeshAxes = Union[str, Tuple[str, ...], None]
@@ -72,6 +88,7 @@ DEFAULT_RULES = AxisRules(
         "fsdp": ("data",),       # parameter/optimizer-state sharding (ZeRO)
         "layers": None,
         "state": None,
+        "window": ("data",),     # SSSJ ring-buffer shards (engine/sharded.py)
     },
     # NOTE: no allow_uneven entries — jit *input* shardings must divide
     # exactly, so an indivisible dim (e.g. 56 heads over model=16, or 8 kv

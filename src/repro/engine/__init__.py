@@ -1,0 +1,36 @@
+"""repro.engine — the device-resident streaming join engine.
+
+Layers (DESIGN.md §4–§5):
+
+  * :mod:`~repro.engine.window` — ring-buffer window primitives shared by
+    every driver (the device form of the paper's circular posting lists);
+  * :mod:`~repro.engine.engine` — :class:`StreamEngine`: ``lax.scan`` over
+    micro-batches with donated carry, on-device pair compaction, async
+    host drain;
+  * :mod:`~repro.engine.sharded` — :class:`ShardedStreamEngine`: one ring
+    shard per device (``"window"`` logical axis), broadcast queries,
+    gathered compacted buffers.
+
+:mod:`repro.core.blocked` remains as a thin compatibility wrapper.
+"""
+
+from .engine import (  # noqa: F401
+    EngineConfig,
+    EngineTelemetry,
+    StreamEngine,
+    StreamEngineBase,
+    make_batch_step,
+    make_micro_step,
+)
+from .sharded import (  # noqa: F401
+    ShardedStreamEngine,
+    init_sharded_window,
+    make_sharded_batch_step,
+)
+from .window import (  # noqa: F401
+    WindowState,
+    init_window,
+    push_batch,
+    push_batch_masked,
+    push_with_overflow,
+)

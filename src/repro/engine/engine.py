@@ -1,0 +1,323 @@
+"""Device-resident streaming join engine: one jit call per request batch.
+
+The previous host driver (:class:`repro.core.blocked.BlockedStreamJoiner`)
+re-entered jit once per micro-batch, fetched the dense ``(B, capacity)`` +
+``(B, B)`` score matrices to the host, and extracted pairs in a Python
+``np.nonzero`` loop — throughput was bounded by PCIe and the GIL, not the
+MXU.  The engine restores the paper's invariant that candidate generation,
+time filtering, and verification never leave the index's hot loop:
+
+  * the ring-buffer :class:`WindowState` is carried through a single
+    ``lax.scan`` over micro-batches (one jit call — and one device
+    round-trip of *control*, not data — per request batch, donated state);
+  * emission is compacted on device (:mod:`repro.kernels.sssj_join.compact`)
+    so only fixed-capacity ``(max_pairs,)`` buffers plus a few scalars ever
+    cross to the host — O(pairs) bytes instead of O(B·capacity);
+  * the host drain is asynchronous: :meth:`StreamEngine.push` enqueues the
+    device buffers and returns without synchronizing; pairs materialize on
+    the host only when the caller asks (:meth:`drain_arrays` /
+    :meth:`drain_pairs`), so back-to-back pushes pipeline on the device.
+
+Telemetry (pruning iterations, emitted/dropped pair counts, overflow)
+accumulates in-carry as device scalars and is summed on the host only at
+:meth:`stats` time.
+
+The scan body (:func:`make_micro_step`) and the host facade
+(:class:`StreamEngineBase`) are shared with the sharded fan-out
+(:mod:`repro.engine.sharded`): the sharded variant differs only in which
+rows each device ingests and in emitting self-join pairs on one shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.similarity import time_horizon
+from ..kernels.sssj_join import PairBuffer, compact_pairs, sssj_join_tiles
+from .window import WindowState, init_window, push_with_overflow
+
+__all__ = [
+    "EngineConfig",
+    "EngineTelemetry",
+    "StreamEngine",
+    "StreamEngineBase",
+    "make_batch_step",
+    "make_micro_step",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    theta: float
+    lam: float
+    capacity: int
+    d: int
+    micro_batch: int = 128       # scan step size; requests are padded up
+    max_pairs: int = 4096        # compacted-emission capacity per micro-batch
+    block_q: int = 128
+    block_w: int = 128
+    chunk_d: int = 128
+    use_ref: bool = False        # route joins through the jnp oracle
+    interpret: Optional[bool] = None
+
+    @property
+    def tau(self) -> float:
+        return time_horizon(self.theta, self.lam)
+
+    @property
+    def join_kwargs(self) -> dict:
+        return dict(
+            theta=self.theta, lam=self.lam, block_q=self.block_q,
+            block_w=self.block_w, chunk_d=self.chunk_d, use_ref=self.use_ref,
+            interpret=self.interpret,
+        )
+
+
+class EngineTelemetry(NamedTuple):
+    """Device-resident counters accumulated in the scan carry.
+
+    ``chunks``/``tiles`` count the *window* join only (self-join tiles have
+    near-zero time deltas and would dilute the pruning signal) — the same
+    accounting the pre-engine driver used, so ``benchmarks/tile_pruning.py``
+    numbers stay comparable across versions.
+    """
+
+    chunks: jax.Array        # () i32 — d-chunks executed (pruning telemetry)
+    tiles: jax.Array         # () i32 — window-join tiles visited
+    pairs: jax.Array         # () i32 — pairs emitted (compacted)
+    dropped: jax.Array       # () i32 — pairs lost to max_pairs overflow
+
+
+def init_telemetry() -> EngineTelemetry:
+    # distinct buffers: the step donates the whole pytree, and donating one
+    # buffer twice is an error
+    return EngineTelemetry(*(jnp.zeros((), jnp.int32) for _ in range(4)))
+
+
+def pad_request(vecs, ts, next_uid: int, micro_batch: int):
+    """Host-side request prep shared by both engines: assign uids, pad the
+    batch to a micro-batch multiple (pad rows carry ``uid = -1`` so the
+    kernel order mask silences them; pad timestamps repeat the last valid
+    one), and reshape into scan inputs.
+
+    Returns ``(uq, qs, tqs, uqs, nvs)``: the assigned uids ``(b,)`` plus
+    the scan stacks ``(n_micro, mb, ·)`` and valid-row counts ``(n_micro,)``.
+    """
+    vecs = np.asarray(vecs, np.float32)
+    ts = np.asarray(ts, np.float32).reshape(-1)
+    b = vecs.shape[0]
+    uq = np.arange(next_uid, next_uid + b, dtype=np.int32)
+    mb = micro_batch
+    n_micro = -(-b // mb)
+    pad = n_micro * mb - b
+    if pad:
+        vecs = np.concatenate([vecs, np.zeros((pad, vecs.shape[1]), np.float32)])
+        ts = np.concatenate([ts, np.full(pad, ts[-1], np.float32)])
+        uq_in = np.concatenate([uq, np.full(pad, -1, np.int32)])
+    else:
+        uq_in = uq
+    nvs = np.full(n_micro, mb, np.int32)
+    nvs[-1] = mb - pad
+    return (
+        uq,
+        jnp.asarray(vecs.reshape(n_micro, mb, -1)),
+        jnp.asarray(ts.reshape(n_micro, mb)),
+        jnp.asarray(uq_in.reshape(n_micro, mb)),
+        jnp.asarray(nvs),
+    )
+
+
+def make_micro_step(
+    cfg: EngineConfig,
+    ingest: Callable,
+    self_mask: Optional[Callable[[jax.Array], jax.Array]] = None,
+):
+    """Build the scan body shared by the single-device and sharded engines.
+
+    ``ingest(state, q, tq, uq, n_valid, t_max) → new state`` pushes this
+    micro-batch (or the shard's slice of it) into the ring with overflow
+    accounting; ``self_mask`` optionally zeroes the within-batch scores
+    (the sharded engine emits them on one shard only).
+    """
+    kw = cfg.join_kwargs
+
+    def micro_step(carry, xs):
+        state, telem = carry
+        q, tq, uq, n_valid = xs
+        tq = tq.astype(jnp.float32)
+        uq = uq.astype(jnp.int32)
+        # join vs the window and within the micro-batch; padded rows carry
+        # uid = -1 so the kernel's order mask silences them everywhere
+        s_win, it_win, _ = sssj_join_tiles(
+            q, state.vecs, tq, state.ts, uq, state.uids, **kw
+        )
+        s_self, _, _ = sssj_join_tiles(q, q, tq, tq, uq, uq, **kw)
+        if self_mask is not None:
+            s_self = self_mask(s_self)
+        scores = jnp.concatenate([s_win, s_self], axis=1)
+        uw_all = jnp.concatenate([state.uids, uq])
+        buf = compact_pairs(scores, uq, uw_all, max_pairs=cfg.max_pairs)
+
+        # newest valid arrival — the reference point for live-slot overflow
+        lanes = jnp.arange(q.shape[0], dtype=jnp.int32)
+        t_max = jnp.max(jnp.where(lanes < n_valid, tq, -jnp.inf))
+        new_state = ingest(state, q, tq, uq, n_valid, t_max)
+        new_telem = EngineTelemetry(
+            chunks=telem.chunks + it_win.sum(),
+            tiles=telem.tiles + it_win.size,
+            pairs=telem.pairs + buf.n_pairs,
+            dropped=telem.dropped + buf.n_dropped,
+        )
+        return (new_state, new_telem), buf
+
+    return micro_step
+
+
+def make_batch_step(cfg: EngineConfig):
+    """Build the jitted request-batch step (single device).
+
+    Signature: ``(state, telem, qs, tqs, uqs, nvs) → (state, telem, bufs)``
+    with ``qs (n_micro, mb, d)``, ``tqs/uqs (n_micro, mb)``, ``nvs
+    (n_micro,)`` valid-row counts, and ``bufs`` a :class:`PairBuffer` whose
+    leaves are stacked over micro-batches.  State and telemetry are donated.
+    """
+    tau = cfg.tau
+
+    def ingest(state, q, tq, uq, n_valid, t_max):
+        return push_with_overflow(state, q, tq, uq, n_valid, t_max, tau)
+
+    micro_step = make_micro_step(cfg, ingest)
+
+    def batch_step(state, telem, qs, tqs, uqs, nvs):
+        (state, telem), bufs = jax.lax.scan(
+            micro_step, (state, telem), (qs, tqs, uqs, nvs)
+        )
+        return state, telem, bufs
+
+    return jax.jit(batch_step, donate_argnums=(0, 1))
+
+
+class StreamEngineBase:
+    """Host facade shared by the single-device and sharded engines.
+
+    Subclasses set ``state``, ``telem``, and ``_step`` in ``__init__`` and
+    override :meth:`_global_capacity`.  Compacted buffers may carry one
+    segment (single device) or one per shard; ``drain_arrays`` handles both
+    through the trailing-axis reshape.
+    """
+
+    def __init__(self, cfg: EngineConfig) -> None:
+        if cfg.max_pairs < 1:
+            raise ValueError("max_pairs must be ≥ 1")
+        self.cfg = cfg
+        self._next_uid = 0
+        self._pending: List[PairBuffer] = []
+        self.n_items = 0
+        # host↔device traffic accounting (what the dense path would have
+        # moved vs what the compacted path actually moves)
+        self.bytes_to_host = 0
+        self.bytes_dense_equiv = 0
+
+    def _global_capacity(self) -> int:
+        return self.cfg.capacity
+
+    # ------------------------------------------------------------------ #
+    def push(self, vecs: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        """Feed one request batch; returns the uids assigned to it.
+
+        Does NOT synchronize with the device — call :meth:`drain_pairs` /
+        :meth:`drain_arrays` to collect emitted pairs.  A new batch size
+        triggers one recompile of the scan.
+        """
+        b = np.asarray(vecs).shape[0]
+        if b == 0:
+            return np.empty((0,), np.int32)
+        uq, qs, tqs, uqs, nvs = pad_request(
+            vecs, ts, self._next_uid, self.cfg.micro_batch
+        )
+        self._next_uid += b
+        self.n_items += b
+        self.state, self.telem, bufs = self._step(
+            self.state, self.telem, qs, tqs, uqs, nvs
+        )
+        self._pending.append(bufs)
+        # the dense path would have fetched (mb, capacity) + (mb, mb) f32
+        # score matrices per micro-batch
+        mb = self.cfg.micro_batch
+        self.bytes_dense_equiv += qs.shape[0] * 4 * (
+            mb * self._global_capacity() + mb * mb
+        )
+        return uq
+
+    # ------------------------------------------------------------------ #
+    def drain_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Synchronize and return ``(uid_a, uid_b, score)`` arrays for every
+        pair emitted since the last drain (uid_a is the newer item)."""
+        mp = self.cfg.max_pairs
+        ua_all, ub_all, sc_all = [], [], []
+        for bufs in self._pending:
+            n = np.asarray(bufs.n_pairs)
+            n = n.reshape(n.shape[0], -1)             # (n_micro, n_segments)
+            ua = np.asarray(bufs.uid_a).reshape(n.shape[0], -1)
+            ub = np.asarray(bufs.uid_b).reshape(n.shape[0], -1)
+            sc = np.asarray(bufs.score).reshape(n.shape[0], -1)
+            self.bytes_to_host += ua.nbytes + ub.nbytes + sc.nbytes + n.nbytes
+            for i in range(n.shape[0]):
+                for s in range(n.shape[1]):
+                    k = int(n[i, s])
+                    ua_all.append(ua[i, s * mp: s * mp + k])
+                    ub_all.append(ub[i, s * mp: s * mp + k])
+                    sc_all.append(sc[i, s * mp: s * mp + k])
+        self._pending.clear()
+        if not ua_all:
+            z = np.empty((0,), np.int32)
+            return z, z.copy(), np.empty((0,), np.float32)
+        return (
+            np.concatenate(ua_all),
+            np.concatenate(ub_all),
+            np.concatenate(sc_all),
+        )
+
+    def drain_pairs(self) -> List[Tuple[int, int, float]]:
+        """Compatibility drain: list of ``(uid_a, uid_b, score)`` tuples."""
+        ua, ub, sc = self.drain_arrays()
+        return list(zip(ua.tolist(), ub.tolist(), sc.tolist()))
+
+    # ------------------------------------------------------------------ #
+    @property
+    def overflow(self) -> int:
+        """Live ring slots overwritten (window undersized), all shards."""
+        return int(np.asarray(self.state.overflow).sum())
+
+    @property
+    def pairs_dropped(self) -> int:
+        """Pairs lost to ``max_pairs`` emission overflow (undersized buffer)."""
+        return int(np.asarray(self.telem.dropped).sum())
+
+    def stats(self) -> dict:
+        t = jax.tree.map(lambda x: int(np.asarray(x).sum()), self.telem)
+        return {
+            "n_items": self.n_items,
+            "chunks_executed": t.chunks,
+            "tiles_total": t.tiles,
+            "pairs_emitted": t.pairs,
+            "pairs_dropped": t.dropped,
+            "window_overflow": self.overflow,
+            "bytes_to_host": self.bytes_to_host,
+            "bytes_dense_equiv": self.bytes_dense_equiv,
+        }
+
+
+class StreamEngine(StreamEngineBase):
+    """Single-device scan-pipelined engine over one ring window."""
+
+    def __init__(self, cfg: EngineConfig) -> None:
+        super().__init__(cfg)
+        self.state: WindowState = init_window(cfg.capacity, cfg.d)
+        self.telem = init_telemetry()
+        self._step = make_batch_step(cfg)

@@ -1,0 +1,164 @@
+"""Sharded fan-out: each device owns a ring-buffer shard of the window.
+
+The single-device engine's capacity wall is memory: one ring of
+``capacity`` vectors.  Here the window is sharded over the mesh axis the
+``"window"`` logical axis resolves to (:data:`repro.distributed.sharding
+.DEFAULT_RULES` maps it to ``data``), so global capacity grows linearly
+with device count — the inverse of the paper's Table-2 result, where STR's
+single-host window was the failure mode.
+
+Schedule per micro-batch (inside one ``shard_map`` + ``lax.scan``, reusing
+the engine's shared scan body — :func:`repro.engine.engine.make_micro_step`):
+
+  * queries are **broadcast** (replicated) — every device joins the full
+    micro-batch against its own window shard only; no ring permutes, no
+    raw-vector traffic between devices after the initial broadcast;
+  * within-batch pairs are computed everywhere (inputs are replicated) but
+    emitted by shard 0 only, so each pair appears exactly once globally;
+  * each device compacts its emissions locally into a ``(max_pairs,)``
+    buffer (:mod:`repro.kernels.sssj_join.compact`) and the buffers are
+    **gathered** by the ``out_specs`` — host traffic stays O(pairs);
+  * arrivals are dealt round-robin (item *i* lands on shard ``i mod P``),
+    so each shard's ring ages uniformly and eviction stays time-ordered
+    per shard.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import AxisRules, DEFAULT_RULES, shard_map
+from ..kernels.sssj_join import PairBuffer
+from .engine import (
+    EngineConfig,
+    EngineTelemetry,
+    StreamEngineBase,
+    init_telemetry,
+    make_micro_step,
+)
+from .window import WindowState, init_window, push_with_overflow
+
+__all__ = ["ShardedStreamEngine", "init_sharded_window", "make_sharded_batch_step"]
+
+
+def _window_axis(mesh: Mesh, rules: AxisRules) -> str:
+    axes = rules.lookup("window")
+    if isinstance(axes, str):
+        axes = (axes,)
+    for a in axes or ():
+        if a in mesh.axis_names:
+            return a
+    raise ValueError(
+        f"no mesh axis for logical 'window' (rules {axes!r}, mesh {mesh.axis_names})"
+    )
+
+
+def init_sharded_window(cfg: EngineConfig, mesh: Mesh, axis: str) -> WindowState:
+    """Global window of ``cfg.capacity`` per-shard slots × axis size."""
+    n = mesh.shape[axis]
+    state = init_window(cfg.capacity * n, cfg.d)
+    shard = NamedSharding(mesh, P(axis))
+    return WindowState(
+        vecs=jax.device_put(state.vecs, NamedSharding(mesh, P(axis, None))),
+        ts=jax.device_put(state.ts, shard),
+        uids=jax.device_put(state.uids, shard),
+        cursor=jax.device_put(jnp.zeros((n,), jnp.int32), shard),
+        overflow=jax.device_put(jnp.zeros((n,), jnp.int32), shard),
+    )
+
+
+def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
+    """Jitted shard_map step with the same signature as
+    :func:`repro.engine.engine.make_batch_step`; per-shard telemetry and
+    pair buffers come back concatenated over the window axis."""
+
+    p = mesh.shape[axis]
+    if cfg.micro_batch % p != 0:
+        raise ValueError(f"micro_batch {cfg.micro_batch} not divisible by {p} shards")
+    tau = cfg.tau
+    bl = cfg.micro_batch // p         # arrivals per shard per micro-batch
+
+    def local_batch(state, telem, qs, tqs, uqs, nvs):
+        me = jax.lax.axis_index(axis)
+
+        def ingest(st, q, tq, uq, n_valid, t_max):
+            # round-robin deal: this shard ingests items me, me+p, me+2p, …
+            idx = me + p * jnp.arange(bl, dtype=jnp.int32)
+            n_valid_l = jnp.sum((idx < n_valid).astype(jnp.int32))
+            return push_with_overflow(
+                st, q[idx], tq[idx], uq[idx], n_valid_l, t_max, tau
+            )
+
+        # replicated inputs ⇒ every shard computes the same self scores;
+        # only shard 0 emits them so each pair appears once globally
+        micro = make_micro_step(
+            cfg, ingest, self_mask=lambda s: jnp.where(me == 0, s, 0.0)
+        )
+
+        # per-shard scalars travel as (1,) slices of the P(axis) arrays
+        sub = state._replace(cursor=state.cursor[0], overflow=state.overflow[0])
+        tl = jax.tree.map(lambda x: x[0], telem)
+        (sub, tl), bufs = jax.lax.scan(micro, (sub, tl), (qs, tqs, uqs, nvs))
+        state = sub._replace(cursor=sub.cursor[None], overflow=sub.overflow[None])
+        telem = jax.tree.map(lambda x: x[None], tl)
+        # scalar leaves come out of the scan as (n_micro,); give them a
+        # trailing axis so out_specs can concatenate shards along it
+        bufs = bufs._replace(
+            n_pairs=bufs.n_pairs[:, None], n_dropped=bufs.n_dropped[:, None]
+        )
+        return state, telem, bufs
+
+    state_specs = WindowState(
+        vecs=P(axis, None), ts=P(axis), uids=P(axis),
+        cursor=P(axis), overflow=P(axis),
+    )
+    telem_specs = EngineTelemetry(P(axis), P(axis), P(axis), P(axis))
+    buf_specs = PairBuffer(
+        uid_a=P(None, axis), uid_b=P(None, axis), score=P(None, axis),
+        n_pairs=P(None, axis), n_dropped=P(None, axis),
+    )
+    fn = shard_map(
+        local_batch,
+        mesh=mesh,
+        in_specs=(state_specs, telem_specs, P(), P(), P(), P()),
+        out_specs=(state_specs, telem_specs, buf_specs),
+        check_vma=False,
+    )
+    return jax.jit(fn, donate_argnums=(0, 1))
+
+
+class ShardedStreamEngine(StreamEngineBase):
+    """Host facade mirroring :class:`StreamEngine` over a device mesh.
+
+    ``cfg.capacity`` is the *per-shard* ring size; the global window holds
+    ``capacity × n_shards`` items.  Per-shard compacted buffers are gathered,
+    so ``drain_arrays`` sees ``n_shards × max_pairs`` slots per micro-batch.
+    """
+
+    def __init__(
+        self,
+        cfg: EngineConfig,
+        mesh: Mesh,
+        rules: AxisRules = DEFAULT_RULES,
+        axis: Optional[str] = None,
+    ) -> None:
+        super().__init__(cfg)
+        self.mesh = mesh
+        self.axis = axis or _window_axis(mesh, rules)
+        self.n_shards = mesh.shape[self.axis]
+        self.state = init_sharded_window(cfg, mesh, self.axis)
+        n = self.n_shards
+        self.telem = jax.tree.map(
+            lambda x: jnp.zeros((n,), x.dtype), init_telemetry()
+        )
+        self._step = make_sharded_batch_step(cfg, mesh, self.axis)
+
+    def _global_capacity(self) -> int:
+        return self.cfg.capacity * self.n_shards
+
+    def stats(self) -> dict:
+        return {**super().stats(), "n_shards": self.n_shards}

@@ -1,0 +1,121 @@
+"""Ring-buffer window state: the device-resident time-filtered index.
+
+The paper's circular-buffer posting lists (§6.2) become one fixed-capacity
+device array of the most recent vectors.  Eviction is implicit — ring
+overwrite drops the oldest items, which the time filter justifies as long
+as ``capacity ≥ arrival_rate · τ`` — and an overflow counter records when
+live items (still within the horizon) were overwritten, so operators can
+size the window.
+
+These primitives are shared by every layer: the single-device
+:class:`~repro.engine.engine.StreamEngine` carries a :class:`WindowState`
+through its ``lax.scan``, the sharded engine gives each device its own
+ring shard, and :mod:`repro.core.blocked` / :mod:`repro.core.distributed`
+re-export them for compatibility.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "WindowState",
+    "init_window",
+    "push_batch",
+    "push_batch_masked",
+    "push_with_overflow",
+]
+
+_EMPTY_T = jnp.float32(3.0e30)
+
+
+class WindowState(NamedTuple):
+    """Sharded ring buffer of recent stream items (a pytree)."""
+
+    vecs: jax.Array    # (capacity, d) f32
+    ts: jax.Array      # (capacity,) f32; empty slots hold +3e30
+    uids: jax.Array    # (capacity,) i32; empty slots hold -1
+    cursor: jax.Array  # () i32 — next write slot
+    overflow: jax.Array  # () i32 — live items overwritten (window undersized)
+
+
+def init_window(capacity: int, d: int, dtype=jnp.float32) -> WindowState:
+    return WindowState(
+        vecs=jnp.zeros((capacity, d), dtype),
+        ts=jnp.full((capacity,), _EMPTY_T, jnp.float32),
+        uids=jnp.full((capacity,), -1, jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.int32),
+    )
+
+
+def push_batch(
+    state: WindowState, q: jax.Array, tq: jax.Array, uq: jax.Array
+) -> WindowState:
+    cap = state.ts.shape[0]
+    b = q.shape[0]
+    pos = (state.cursor + jnp.arange(b, dtype=jnp.int32)) % cap
+    return state._replace(
+        vecs=state.vecs.at[pos].set(q.astype(state.vecs.dtype)),
+        ts=state.ts.at[pos].set(tq.astype(jnp.float32)),
+        uids=state.uids.at[pos].set(uq.astype(jnp.int32)),
+        cursor=(state.cursor + b) % cap,
+    )
+
+
+def push_batch_masked(
+    state: WindowState,
+    q: jax.Array,
+    tq: jax.Array,
+    uq: jax.Array,
+    n_valid: jax.Array,
+) -> WindowState:
+    """Push only the first ``n_valid`` rows (the rest are scan padding).
+
+    Writes for invalid rows are routed out of bounds and dropped, and the
+    cursor advances by ``n_valid`` — a padded micro-batch therefore leaves
+    the ring byte-identical to an unpadded push of the valid prefix, which
+    is what makes results invariant to the micro-batch split (tested by
+    ``test_engine.py::test_scan_carry_determinism``).
+    """
+    cap = state.ts.shape[0]
+    b = q.shape[0]
+    lanes = jnp.arange(b, dtype=jnp.int32)
+    pos = (state.cursor + lanes) % cap
+    dest = jnp.where(lanes < n_valid, pos, cap)   # cap is OOB → dropped
+    return state._replace(
+        vecs=state.vecs.at[dest].set(q.astype(state.vecs.dtype), mode="drop"),
+        ts=state.ts.at[dest].set(tq.astype(jnp.float32), mode="drop"),
+        uids=state.uids.at[dest].set(uq.astype(jnp.int32), mode="drop"),
+        cursor=(state.cursor + n_valid.astype(jnp.int32)) % cap,
+    )
+
+
+def push_with_overflow(
+    state: WindowState,
+    q: jax.Array,
+    tq: jax.Array,
+    uq: jax.Array,
+    n_valid: jax.Array,
+    t_max: jax.Array,
+    tau: float,
+) -> WindowState:
+    """Masked push that also counts live-slot overwrites.
+
+    A slot is *live* if it holds a real item (uid ≥ 0) still within the
+    horizon ``tau`` of the newest arrival ``t_max``; overwriting one means
+    the window is undersized and emission becomes best-effort, so the
+    ``overflow`` counter records it for the operator.
+    """
+    cap = state.ts.shape[0]
+    lanes = jnp.arange(q.shape[0], dtype=jnp.int32)
+    valid = lanes < n_valid
+    pos = (state.cursor + lanes) % cap
+    live = valid & (state.uids[pos] >= 0) & (t_max - state.ts[pos] <= tau)
+    new_state = push_batch_masked(state, q, tq, uq, n_valid)
+    return new_state._replace(
+        overflow=state.overflow + jnp.sum(live.astype(jnp.int32))
+    )

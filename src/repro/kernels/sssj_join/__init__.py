@@ -1,2 +1,3 @@
-from .ops import sssj_join_scores, suffix_chunk_norms, NEG_UID  # noqa: F401
+from .compact import PairBuffer, compact_pairs, tile_emit_counts  # noqa: F401
+from .ops import sssj_join_scores, sssj_join_tiles, suffix_chunk_norms, NEG_UID  # noqa: F401
 from .ref import sssj_join_ref  # noqa: F401

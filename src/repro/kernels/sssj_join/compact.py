@@ -1,0 +1,99 @@
+"""On-device pair compaction: dense thresholded scores → (uid_a, uid_b, s).
+
+Stage 2 + 3 of the compaction pipeline (DESIGN.md §3).  The join kernel
+emits a dense thresholded score matrix (zeros everywhere a pair was pruned
+or below θ) plus per-tile emit counts (stage 1).  This module turns that
+matrix into a fixed-capacity compacted buffer *without leaving the device*:
+
+  stage 2 — **exclusive scan**: per-segment counts are scanned to produce
+            each segment's base offset in the output buffer;
+  stage 3 — **gather/scatter**: every emitted entry knows its destination
+            ``base_offset + within-segment rank`` and is scattered into the
+            ``(max_pairs,)`` buffers; entries past ``max_pairs`` are dropped
+            and counted (the overflow contract).
+
+Segments here are matrix rows (one query each): a row is the natural tile
+at compaction granularity, and its count/scan/rank are pure VPU work.  The
+kernel's per-(BQ, BW)-tile counts are the same quantity at MXU-tile
+granularity and are used for telemetry and cross-checking (tests assert
+``tile_counts.sum() == n_pairs + n_dropped``).
+
+Everything is shape-static and jit-safe, so the whole join → compact →
+fetch path fuses into one XLA program and only ``O(max_pairs)`` bytes —
+not the dense ``(B, capacity)`` matrix — ever cross the PCIe boundary.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PairBuffer", "compact_pairs", "tile_emit_counts"]
+
+
+class PairBuffer(NamedTuple):
+    """Fixed-capacity compacted pair emission (a pytree of device arrays)."""
+
+    uid_a: jax.Array     # (max_pairs,) i32 — query-side uid, -1 beyond n_pairs
+    uid_b: jax.Array     # (max_pairs,) i32 — window-side uid, -1 beyond n_pairs
+    score: jax.Array     # (max_pairs,) f32 — decayed similarity, 0 beyond n_pairs
+    n_pairs: jax.Array   # () i32 — valid entries = min(total emitted, max_pairs)
+    n_dropped: jax.Array  # () i32 — entries lost to capacity (overflow flag > 0)
+
+    @property
+    def overflowed(self) -> jax.Array:
+        return self.n_dropped > 0
+
+
+def compact_pairs(
+    scores: jax.Array,   # (Q, W) f32 — 0 where no pair, ≥ θ where emitted
+    uq: jax.Array,       # (Q,) i32 query uids
+    uw: jax.Array,       # (W,) i32 window uids aligned with score columns
+    *,
+    max_pairs: int,
+) -> PairBuffer:
+    """Count → scan-select → gather, entirely on device.
+
+    The scan+select is expressed as a stable ``lax.top_k`` over the emit
+    mask: ties break toward the lower index, so the returned indices are
+    exactly the first ``max_pairs`` emitted positions in stream order —
+    the same destinations an explicit exclusive-scan-of-counts would
+    assign, but as one fused gather instead of a large scatter (XLA CPU
+    serializes scatters; top_k + gather also maps better onto the TPU's
+    sort unit).
+    """
+    Q, W = scores.shape
+    mask = scores > 0.0
+    # stage 1: per-segment counts (the kernel already produced these per
+    # MXU tile — recomputed at row granularity, still device-resident)
+    counts = jnp.sum(mask, axis=1, dtype=jnp.int32)            # (Q,)
+    total = jnp.sum(counts)
+    # stage 2+3: select the first max_pairs emitted positions and gather
+    k = min(max_pairs, Q * W)
+    hit, idx = jax.lax.top_k(mask.ravel().astype(jnp.float32), k)
+    valid = hit > 0.0
+    qi = (idx // W).astype(jnp.int32)
+    wi = (idx % W).astype(jnp.int32)
+    uid_a = jnp.where(valid, uq.astype(jnp.int32)[qi], -1)
+    uid_b = jnp.where(valid, uw.astype(jnp.int32)[wi], -1)
+    score = jnp.where(valid, scores.ravel().astype(jnp.float32)[idx], 0.0)
+    if k < max_pairs:
+        pad = max_pairs - k
+        uid_a = jnp.concatenate([uid_a, jnp.full((pad,), -1, jnp.int32)])
+        uid_b = jnp.concatenate([uid_b, jnp.full((pad,), -1, jnp.int32)])
+        score = jnp.concatenate([score, jnp.zeros((pad,), jnp.float32)])
+    n_pairs = jnp.minimum(total, max_pairs).astype(jnp.int32)
+    return PairBuffer(uid_a, uid_b, score, n_pairs, (total - n_pairs).astype(jnp.int32))
+
+
+def tile_emit_counts(scores: jax.Array, block_q: int, block_w: int) -> jax.Array:
+    """Per-(block_q, block_w)-tile emit counts from a dense score matrix —
+    the jnp mirror of the kernel's stage-1 output, for the ref path."""
+    Q, W = scores.shape
+    pq, pw = (-Q) % block_q, (-W) % block_w
+    s = jnp.pad(scores, ((0, pq), (0, pw)))
+    nq, nw = (Q + pq) // block_q, (W + pw) // block_w
+    m = (s > 0.0).reshape(nq, block_q, nw, block_w)
+    return jnp.sum(m, axis=(1, 3), dtype=jnp.int32)

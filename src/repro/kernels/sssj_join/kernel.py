@@ -29,9 +29,12 @@ VMEM footprint per program ≈ (BQ + BW)·d·bytes + BQ·BW·4.  With the defaul
 BQ = BW = 128, d ≤ 8192 this stays within a v5e core's ~16 MB VMEM budget
 for bf16 inputs; wider models should shrink BQ/BW or shard d (see ops.py).
 
-Outputs: the score tile and a per-tile iteration count (number of d-chunks
+Outputs: the score tile, a per-tile iteration count (number of d-chunks
 actually executed) — the TPU analogue of the paper's "entries traversed"
-instrumentation (Figs. 2/6).
+instrumentation (Figs. 2/6) — and a per-tile count of emitted (≥ θ) entries,
+which is stage 1 of the on-device pair compaction pipeline (DESIGN.md §3):
+count per tile → exclusive scan for offsets → gather into a fixed-capacity
+pair buffer, so only O(pairs) bytes ever cross to the host.
 """
 
 from __future__ import annotations
@@ -49,7 +52,7 @@ NEG_UID = -1  # uid marking empty / padded slots
 
 def _kernel(
     q_ref, w_ref, tq_ref, tw_ref, uq_ref, uw_ref, sqq_ref, sqw_ref,
-    out_ref, iters_ref,
+    out_ref, iters_ref, counts_ref,
     *, theta: float, lam: float, chunk_d: int, n_chunks: int,
 ):
     f32 = jnp.float32
@@ -95,8 +98,11 @@ def _kernel(
     k_final, acc, _ = jax.lax.while_loop(cond, body, (0, acc0, tile_alive))
 
     scores = acc * decay
-    out_ref[...] = jnp.where(scores >= theta, scores, 0.0)
+    emitted = jnp.where(scores >= theta, scores, 0.0)
+    out_ref[...] = emitted
     iters_ref[0, 0] = k_final
+    # stage 1 of pair compaction: how many entries this tile will emit
+    counts_ref[0, 0] = jnp.sum((emitted > 0.0).astype(jnp.int32))
 
 
 def sssj_join_kernel_call(
@@ -115,8 +121,12 @@ def sssj_join_kernel_call(
     block_w: int,
     chunk_d: int,
     interpret: bool,
-) -> tuple[jax.Array, jax.Array]:
-    """Raw pallas_call; shapes must already be padded to block multiples."""
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Raw pallas_call; shapes must already be padded to block multiples.
+
+    Returns ``(scores (Q, W), iters (nQ, nW), counts (nQ, nW))`` where
+    ``counts`` is the per-tile number of emitted (≥ θ) entries.
+    """
     Q, d = q.shape
     W, _ = w.shape
     n_chunks = d // chunk_d
@@ -127,6 +137,7 @@ def sssj_join_kernel_call(
     )
     out_shape = [
         jax.ShapeDtypeStruct((Q, W), jnp.float32),
+        jax.ShapeDtypeStruct(grid, jnp.int32),
         jax.ShapeDtypeStruct(grid, jnp.int32),
     ]
     in_specs = [
@@ -141,6 +152,7 @@ def sssj_join_kernel_call(
     ]
     out_specs = [
         pl.BlockSpec((block_q, block_w), lambda i, j: (i, j)),
+        pl.BlockSpec((1, 1), lambda i, j: (i, j)),
         pl.BlockSpec((1, 1), lambda i, j: (i, j)),
     ]
     return pl.pallas_call(

@@ -1,7 +1,9 @@
-"""Public jit'd wrapper for the SSSJ blocked-join kernel.
+"""Public jit'd wrappers for the SSSJ blocked-join kernel.
 
 Handles padding to block multiples, suffix-norm precomputation (the ℓ2
-pruning bounds), backend auto-detection (interpret mode off-TPU), and
+pruning bounds), backend auto-detection (interpret mode off-TPU), routing
+of sub-block inputs through the jnp reference (a `pallas_call` on a
+smaller-than-one-block problem only pays padding + launch overhead), and
 unpadding of the outputs.
 """
 
@@ -13,10 +15,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .compact import tile_emit_counts
 from .kernel import NEG_UID, sssj_join_kernel_call
 from .ref import sssj_join_ref
 
-__all__ = ["sssj_join_scores", "suffix_chunk_norms", "NEG_UID"]
+__all__ = ["sssj_join_scores", "sssj_join_tiles", "suffix_chunk_norms", "NEG_UID"]
 
 
 def suffix_chunk_norms(x: jax.Array, chunk_d: int) -> jax.Array:
@@ -52,7 +55,7 @@ def _pad_rows(x: jax.Array, mult: int, fill=0):
         "theta", "lam", "block_q", "block_w", "chunk_d", "interpret", "use_ref"
     ),
 )
-def sssj_join_scores(
+def sssj_join_tiles(
     q: jax.Array,
     w: jax.Array,
     tq: jax.Array,
@@ -67,8 +70,8 @@ def sssj_join_scores(
     chunk_d: int = 128,
     interpret: Optional[bool] = None,
     use_ref: bool = False,
-) -> tuple[jax.Array, jax.Array]:
-    """Blocked time-decayed similarity join.
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Blocked time-decayed similarity join with per-tile telemetry.
 
     Args:
       q:  (Q, d) query vectors (unit-normalized; f32 or bf16).
@@ -78,14 +81,18 @@ def sssj_join_scores(
       uq: (Q,) query uids (monotone stream counters).
       uw: (W,) window uids; negative marks empty ring slots.
       theta, lam: SSSJ parameters.
-      use_ref: route through the pure-jnp oracle instead of the kernel
-        (used by tests and as the fallback for unaligned tiny inputs).
+      use_ref: route through the pure-jnp oracle instead of the kernel.
+        Inputs smaller than one block (Q < block_q, W < block_w, or
+        d < chunk_d) are auto-routed through the reference as well — the
+        kernel would spend its time on padding for them.
 
     Returns:
       scores: (Q, W) f32 — decayed similarity where ≥ θ (masked by uid
         order), 0 elsewhere.
       iters:  (nQ, nW) i32 — d-chunks executed per tile (pruning telemetry);
-        all-`n_chunks` when use_ref.
+        all-`n_chunks` on the ref path.
+      counts: (nQ, nW) i32 — emitted (≥ θ) entries per tile, stage 1 of the
+        on-device pair compaction (see compact.py).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -96,6 +103,10 @@ def sssj_join_scores(
 
     Q, d = q.shape
     W, _ = w.shape
+    # ref fallback for unaligned tiny inputs: anything smaller than a single
+    # kernel block would be all padding, so the dense jnp oracle is cheaper
+    if Q < block_q or W < block_w or d < chunk_d:
+        use_ref = True
     if use_ref:
         scores = sssj_join_ref(q, w, tq, tw, uq, uw, theta=theta, lam=lam)
         n_chunks = max(d // chunk_d, 1)
@@ -104,7 +115,8 @@ def sssj_join_scores(
             n_chunks,
             jnp.int32,
         )
-        return scores, iters
+        counts = tile_emit_counts(scores, block_q, block_w)
+        return scores, iters, counts
 
     if d % chunk_d != 0:
         pad_d = (-d) % chunk_d
@@ -121,10 +133,16 @@ def sssj_join_scores(
     sqq = suffix_chunk_norms(qp, chunk_d)
     sqw = suffix_chunk_norms(wp, chunk_d)
 
-    scores, iters = sssj_join_kernel_call(
+    scores, iters, counts = sssj_join_kernel_call(
         qp, wp, tqp, twp, uqp, uwp, sqq, sqw,
         theta=theta, lam=lam,
         block_q=block_q, block_w=block_w, chunk_d=chunk_d,
         interpret=interpret,
     )
-    return scores[:Q, :W], iters
+    return scores[:Q, :W], iters, counts
+
+
+def sssj_join_scores(*args, **kw) -> tuple[jax.Array, jax.Array]:
+    """Back-compat wrapper of :func:`sssj_join_tiles` without tile counts."""
+    scores, iters, _ = sssj_join_tiles(*args, **kw)
+    return scores, iters

@@ -66,8 +66,12 @@ def run_service(
     groups = service.duplicate_groups()
     trends = service.trending(min_size=3)
     if verbose:
+        es = service.engine.stats()
         print(f"\nitems={service.stats.n_items} planted_dups={planted} "
-              f"pairs={service.stats.n_pairs}")
+              f"pairs={service.stats.n_pairs} "
+              f"dropped={service.stats.pairs_dropped}")
+        print(f"host↔device: {es['bytes_to_host']} B compacted vs "
+              f"{es['bytes_dense_equiv']} B dense-equivalent")
         print(f"duplicate groups: {len(groups)}; trending (≥3): {len(trends)}")
         for g in trends[:5]:
             print("  trend:", g)

@@ -2,19 +2,20 @@
 
 This is the paper's system as a *service*: timestamped documents arrive in
 request batches; each batch is embedded (LM backbone or caller-provided
-vectors), unit-normalized, and joined against the recent-past window; the
-emitted pairs drive near-duplicate grouping (union-find) — application #2 —
-or trend detection (growing groups within the horizon) — application #1.
+vectors), unit-normalized, and fed to the device-resident
+:class:`repro.engine.StreamEngine`; the compacted pair arrays it drains
+drive near-duplicate grouping (union-find) — application #2 — or trend
+detection (growing groups within the horizon) — application #1.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.blocked import BlockedJoinConfig, BlockedStreamJoiner
+from ..engine.engine import EngineConfig, StreamEngine
 
 __all__ = ["SSSJService", "ServiceStats"]
 
@@ -25,23 +26,42 @@ class ServiceStats:
     n_pairs: int = 0
     n_groups: int = 0
     window_overflow: int = 0
+    pairs_dropped: int = 0
+    bytes_to_host: int = 0
 
 
 class _UnionFind:
+    """Union-find with two-pass path compression and union by size."""
+
+    __slots__ = ("parent", "size")
+
     def __init__(self) -> None:
         self.parent: Dict[int, int] = {}
+        self.size: Dict[int, int] = {}
 
     def find(self, x: int) -> int:
-        p = self.parent.setdefault(x, x)
-        while p != self.parent.get(p, p):
-            self.parent[x] = self.parent[p]
-            p = self.parent[p]
-        return p
+        parent = self.parent
+        root = parent.get(x)
+        if root is None:
+            parent[x] = x
+            self.size[x] = 1
+            return x
+        # pass 1: walk to the root
+        while parent[root] != root:
+            root = parent[root]
+        # pass 2: point every node on the path straight at the root
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
 
     def union(self, a: int, b: int) -> None:
         ra, rb = self.find(a), self.find(b)
-        if ra != rb:
-            self.parent[max(ra, rb)] = min(ra, rb)
+        if ra == rb:
+            return
+        if self.size[ra] < self.size[rb]:
+            ra, rb = rb, ra
+        self.parent[rb] = ra
+        self.size[ra] += self.size[rb]
 
 
 class SSSJService:
@@ -55,16 +75,23 @@ class SSSJService:
         capacity: int = 4096,
         embed_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
         block: int = 64,
+        max_pairs: int = 4096,
+        strict: bool = True,
     ) -> None:
-        cfg = BlockedJoinConfig(
+        """``strict`` keeps the pre-engine lossless contract: a request
+        whose emission overflows ``max_pairs`` raises instead of silently
+        grouping on a truncated pair set.  Pass ``strict=False`` to accept
+        best-effort grouping and watch ``stats.pairs_dropped``."""
+        cfg = EngineConfig(
             theta=theta, lam=lam, capacity=capacity, d=dim,
+            micro_batch=block, max_pairs=max_pairs,
             block_q=block, block_w=block, chunk_d=min(dim, 128),
         )
-        self.joiner = BlockedStreamJoiner(cfg)
+        self.engine = StreamEngine(cfg)
         self.embed_fn = embed_fn
+        self.strict = strict
         self.groups = _UnionFind()
         self.stats = ServiceStats()
-        self._group_members: Dict[int, List[int]] = {}
 
     # ------------------------------------------------------------------ #
     def submit(
@@ -80,19 +107,34 @@ class SSSJService:
             vecs = np.asarray(batch, np.float32)
             norms = np.linalg.norm(vecs, axis=1, keepdims=True)
             vecs = vecs / np.maximum(norms, 1e-9)
-        pairs = self.joiner.push(vecs, np.asarray(timestamps, np.float64))
+        dropped_before = self.engine.pairs_dropped
+        self.engine.push(vecs, np.asarray(timestamps, np.float64))
+        dropped = self.engine.pairs_dropped - dropped_before
+        if dropped and self.strict:
+            # surviving pairs stay queued for recovery via engine.drain_*
+            raise RuntimeError(
+                f"emission overflow: {dropped} pairs dropped this request "
+                f"(max_pairs={self.engine.cfg.max_pairs} per micro-batch); "
+                f"raise max_pairs or construct SSSJService(strict=False)"
+            )
+        # one sync per request batch: the compacted arrays, not dense scores
+        ua, ub, sc = self.engine.drain_arrays()
+        pairs = list(zip(ua.tolist(), ub.tolist(), sc.tolist()))
+        union = self.groups.union
         for a, b, _ in pairs:
-            self.groups.union(a, b)
+            union(a, b)
         self.stats.n_items += vecs.shape[0]
         self.stats.n_pairs += len(pairs)
-        self.stats.window_overflow = self.joiner.overflow
+        self.stats.window_overflow = self.engine.overflow
+        self.stats.pairs_dropped = self.engine.pairs_dropped
+        self.stats.bytes_to_host = self.engine.bytes_to_host
         return pairs
 
     # ------------------------------------------------------------------ #
     def duplicate_groups(self) -> List[List[int]]:
         """Connected components of the similar-pair graph (app #2)."""
         comp: Dict[int, List[int]] = {}
-        for x in self.groups.parent:
+        for x in list(self.groups.parent):
             comp.setdefault(self.groups.find(x), []).append(x)
         groups = [sorted(v) for v in comp.values() if len(v) > 1]
         self.stats.n_groups = len(groups)

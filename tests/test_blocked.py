@@ -49,6 +49,23 @@ def test_blocked_matches_faithful_core():
     assert got == truth
 
 
+def test_emission_overflow_raises():
+    """The compat wrapper was lossless pre-engine; a truncated pair list
+    must raise, not return silently (repro.engine handles drops itself)."""
+    d = 32
+    rng = np.random.default_rng(2)
+    base = rng.standard_normal(d).astype(np.float32)
+    vecs = base + 0.01 * rng.standard_normal((64, d)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    ts = np.linspace(0.0, 0.01, 64)
+    cfg = BlockedJoinConfig(theta=0.9, lam=0.01, capacity=128, d=d,
+                            block_q=32, block_w=32, chunk_d=32, max_pairs=8)
+    bj = BlockedStreamJoiner(cfg)
+    with pytest.raises(RuntimeError, match="max_pairs"):
+        for i in range(0, 64, 32):
+            bj.push(vecs[i:i + 32], ts[i:i + 32])
+
+
 def test_ring_overflow_counter():
     """Overwriting still-live items must be counted (window undersized)."""
     d = 32

@@ -5,7 +5,12 @@ negatives (DESIGN.md §8 item 3)."""
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.index_l2 import L2FamilyIndex
 from repro.core.similarity import decayed_similarity, time_horizon

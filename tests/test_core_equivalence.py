@@ -6,7 +6,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     Counters, brute_force_join, join_stream, make_joiner, time_horizon,

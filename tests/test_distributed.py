@@ -34,8 +34,7 @@ def test_distributed_ring_join_exact():
         theta, lam, d = 0.8, 0.05, 64
         vecs, ts = dense_embedding_stream(256, d, seed=3, rate=2.0)
         truth = planted_duplicates(vecs, ts, theta, lam)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         cfg = DistributedJoinConfig(base=BlockedJoinConfig(
             theta=theta, lam=lam, capacity=128, d=d,
             block_q=32, block_w=32, chunk_d=32))

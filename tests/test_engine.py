@@ -1,0 +1,222 @@
+"""Device-resident engine: compacted emission vs the dense oracle,
+overflow contracts, scan-carry determinism, and the sharded fan-out."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data.synth import dense_embedding_stream, planted_duplicates
+from repro.engine import EngineConfig, StreamEngine
+from repro.kernels.sssj_join import compact_pairs, sssj_join_tiles
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg(theta=0.8, lam=0.05, d=64, **kw):
+    base = dict(theta=theta, lam=lam, capacity=512, d=d, micro_batch=32,
+                max_pairs=1024, block_q=32, block_w=32, chunk_d=32)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _pair_set(ua, ub):
+    return set((min(a, b), max(a, b)) for a, b in zip(ua.tolist(), ub.tolist()))
+
+
+# --------------------------------------------------------------------- #
+# compacted emission == dense np.nonzero extraction
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("theta,lam", [(0.8, 0.05), (0.6, 0.2), (0.95, 0.02)])
+def test_engine_matches_dense_oracle(theta, lam):
+    d = 64
+    vecs, ts = dense_embedding_stream(320, d, seed=7, rate=2.0)
+    truth = planted_duplicates(vecs, ts, theta, lam)
+    eng = StreamEngine(_cfg(theta=theta, lam=lam, d=d))
+    for i in range(0, 320, 80):          # 80 = 2.5 micro-batches → padding
+        eng.push(vecs[i:i + 80], ts[i:i + 80])
+    ua, ub, sc = eng.drain_arrays()
+    assert _pair_set(ua, ub) == truth
+    assert (sc >= theta).all()
+    assert eng.pairs_dropped == 0
+    assert eng.overflow == 0
+
+
+def test_compaction_matches_nonzero_extraction(rng):
+    """compact_pairs must reproduce np.nonzero over the dense score matrix
+    exactly: same pairs, same scores."""
+    Q, W, d = 96, 64, 64
+    q = rng.standard_normal((Q, d)).astype(np.float32)
+    q[: Q // 4] = q[Q // 4: Q // 2] + 0.02  # plant some matches
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    tq = np.sort(rng.random(Q)).astype(np.float32)
+    uq = np.arange(100, 100 + Q, dtype=np.int32)
+    w = q[:W]
+    tw = tq[:W]
+    uw = np.arange(W, dtype=np.int32)
+    scores, _, counts = sssj_join_tiles(
+        jnp.asarray(q), jnp.asarray(w), jnp.asarray(tq), jnp.asarray(tw),
+        jnp.asarray(uq), jnp.asarray(uw),
+        theta=0.5, lam=0.1, block_q=32, block_w=32, chunk_d=32,
+    )
+    buf = compact_pairs(scores, jnp.asarray(uq), jnp.asarray(uw), max_pairs=512)
+    n = int(buf.n_pairs)
+    s_np = np.asarray(scores)
+    qi, wi = np.nonzero(s_np)
+    assert n == qi.size and int(buf.n_dropped) == 0
+    # kernel per-tile counts (compaction stage 1) agree with the dense matrix
+    assert int(np.asarray(counts).sum()) == qi.size
+    got = {
+        (int(a), int(b)): float(s)
+        for a, b, s in zip(
+            np.asarray(buf.uid_a)[:n], np.asarray(buf.uid_b)[:n],
+            np.asarray(buf.score)[:n],
+        )
+    }
+    want = {(int(uq[a]), int(uw[b])): float(s_np[a, b]) for a, b in zip(qi, wi)}
+    assert got.keys() == want.keys()
+    for k in want:
+        assert abs(got[k] - want[k]) < 1e-6
+    # buffer tail is inert
+    assert (np.asarray(buf.uid_a)[n:] == -1).all()
+    assert (np.asarray(buf.score)[n:] == 0.0).all()
+
+
+# --------------------------------------------------------------------- #
+# overflow contracts
+# --------------------------------------------------------------------- #
+def test_max_pairs_overflow_flag():
+    """When a micro-batch emits more than max_pairs, the engine must keep
+    the first max_pairs pairs, report the rest as dropped, and keep the
+    window state exact (no corruption of later batches)."""
+    d = 32
+    rng = np.random.default_rng(1)
+    base = rng.standard_normal(d).astype(np.float32)
+    vecs = base + 0.01 * rng.standard_normal((64, d)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    ts = np.linspace(0.0, 0.01, 64)      # everything similar & recent
+    small = StreamEngine(_cfg(theta=0.9, lam=0.01, d=d, max_pairs=16))
+    big = StreamEngine(_cfg(theta=0.9, lam=0.01, d=d, max_pairs=4096))
+    for i in range(0, 64, 32):
+        small.push(vecs[i:i + 32], ts[i:i + 32])
+        big.push(vecs[i:i + 32], ts[i:i + 32])
+    ua_s, ub_s, _ = small.drain_arrays()
+    ua_b, ub_b, _ = big.drain_arrays()
+    assert big.pairs_dropped == 0
+    assert small.pairs_dropped > 0
+    assert ua_s.size + small.pairs_dropped == ua_b.size
+    # the survivors are a subset of the true pair set
+    assert _pair_set(ua_s, ub_s) <= _pair_set(ua_b, ub_b)
+
+
+def test_ring_overflow_counter():
+    """Overwriting still-live items must be counted (window undersized)."""
+    d = 32
+    rng = np.random.default_rng(0)
+    vecs = rng.standard_normal((128, d)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    ts = np.linspace(0.0, 0.1, 128)
+    eng = StreamEngine(_cfg(theta=0.9, lam=0.001, d=d, capacity=64))
+    for i in range(0, 128, 32):
+        eng.push(vecs[i:i + 32], ts[i:i + 32])
+    assert eng.overflow > 0
+
+
+# --------------------------------------------------------------------- #
+# scan-carry determinism
+# --------------------------------------------------------------------- #
+def test_scan_carry_determinism():
+    """The emitted pair set and the final window state must not depend on
+    how the stream is split into push calls or micro-batches."""
+    d = 64
+    vecs, ts = dense_embedding_stream(192, d, seed=13, rate=2.0)
+
+    def run(push_sizes, micro_batch):
+        eng = StreamEngine(_cfg(d=d, micro_batch=micro_batch))
+        i = 0
+        for b in push_sizes:
+            eng.push(vecs[i:i + b], ts[i:i + b])
+            i += b
+        assert i == 192
+        ua, ub, sc = eng.drain_arrays()
+        pairs = set(zip(ua.tolist(), ub.tolist(), np.round(sc, 5).tolist()))
+        return pairs, eng.state
+
+    ref_pairs, ref_state = run([192], 32)
+    for split, mb in [
+        ([64] * 3, 32),
+        ([50, 50, 50, 42], 32),          # pad every push
+        ([192], 16),                     # finer micro-batches
+        ([33] * 5 + [27], 16),
+    ]:
+        pairs, state = run(split, mb)
+        assert pairs == ref_pairs, (split, mb)
+        np.testing.assert_array_equal(np.asarray(state.uids),
+                                      np.asarray(ref_state.uids))
+        np.testing.assert_array_equal(np.asarray(state.ts),
+                                      np.asarray(ref_state.ts))
+        np.testing.assert_allclose(np.asarray(state.vecs),
+                                   np.asarray(ref_state.vecs))
+        assert int(state.cursor) == int(ref_state.cursor)
+
+
+# --------------------------------------------------------------------- #
+# telemetry
+# --------------------------------------------------------------------- #
+def test_engine_telemetry_and_bytes():
+    d = 64
+    vecs, ts = dense_embedding_stream(128, d, seed=5, rate=2.0)
+    eng = StreamEngine(_cfg(d=d))
+    eng.push(vecs, ts)
+    ua, _, _ = eng.drain_arrays()
+    s = eng.stats()
+    assert s["n_items"] == 128
+    assert s["tiles_total"] > 0
+    # in-carry emit counter agrees with what the drain actually delivered
+    assert s["pairs_emitted"] == ua.shape[0]
+    assert s["pairs_dropped"] == 0
+    # compacted drain must move less than the dense matrices would have
+    assert 0 < s["bytes_to_host"] < s["bytes_dense_equiv"]
+
+
+# --------------------------------------------------------------------- #
+# sharded fan-out (8 forced host devices; subprocess keeps the main
+# process on 1 device — see test_distributed.py)
+# --------------------------------------------------------------------- #
+def test_sharded_engine_matches_oracle():
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.data.synth import dense_embedding_stream, planted_duplicates
+        from repro.engine import EngineConfig, ShardedStreamEngine
+        theta, lam, d = 0.8, 0.05, 64
+        vecs, ts = dense_embedding_stream(256, d, seed=3, rate=2.0)
+        truth = planted_duplicates(vecs, ts, theta, lam)
+        mesh = jax.make_mesh((8,), ("data",))
+        cfg = EngineConfig(theta=theta, lam=lam, capacity=64, d=d,
+                           micro_batch=32, max_pairs=512,
+                           block_q=32, block_w=32, chunk_d=32)
+        eng = ShardedStreamEngine(cfg, mesh)
+        for i in range(0, 256, 80):      # ragged pushes → padding path too
+            eng.push(vecs[i:i+80], ts[i:i+80])
+        ua, ub, sc = eng.drain_arrays()
+        got = set((min(a, b), max(a, b)) for a, b in zip(ua.tolist(), ub.tolist()))
+        assert got == truth, (len(got), len(truth))
+        assert (sc >= theta).all()
+        assert eng.pairs_dropped == 0
+        s = eng.stats()
+        assert s["n_shards"] == 8 and s["n_items"] == 256
+        print("sharded engine exact:", len(got))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "sharded engine exact:" in r.stdout

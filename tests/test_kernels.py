@@ -78,6 +78,39 @@ def test_sssj_tile_pruning_saves_chunks(rng):
     assert float(jnp.abs(s).sum()) == 0.0
 
 
+@pytest.mark.parametrize("q_n,w_n,d,routed_to_ref", [
+    (8, 8, 16, True),      # smaller than one block in every dim → ref
+    (100, 8, 128, True),   # window smaller than one block → ref
+    (8, 100, 128, True),   # queries smaller than one block → ref
+    (64, 64, 16, True),    # feature dim smaller than one chunk → ref
+    (64, 64, 64, False),   # at least one block everywhere → kernel
+    (64, 96, 128, False),
+])
+def test_sssj_small_input_ref_routing(q_n, w_n, d, routed_to_ref, rng):
+    """Inputs smaller than one block auto-route through the jnp oracle;
+    both paths must agree with the reference exactly."""
+    from repro.kernels.sssj_join import sssj_join_tiles
+
+    q = _unit_rows(rng, q_n, d, jnp.float32)
+    w = _unit_rows(rng, w_n, d, jnp.float32)
+    tq = jnp.asarray((rng.random(q_n) * 2).astype(np.float32)) + 1.0
+    tw = jnp.asarray((rng.random(w_n) * 2).astype(np.float32))
+    uq = jnp.arange(1000, 1000 + q_n, dtype=jnp.int32)
+    uw = jnp.arange(w_n, dtype=jnp.int32)
+    kw = dict(theta=0.3, lam=0.05, block_q=32, block_w=32, chunk_d=32)
+    s, iters, counts = sssj_join_tiles(q, w, tq, tw, uq, uw, **kw)
+    s_ref = sssj_join_ref(q, w, tq.reshape(-1, 1), tw.reshape(-1, 1),
+                          uq.reshape(-1, 1), uw.reshape(-1, 1),
+                          theta=0.3, lam=0.05)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=1e-5)
+    # per-tile emit counts (compaction stage 1) match on either path
+    assert int(np.asarray(counts).sum()) == int((np.asarray(s) > 0).sum())
+    n_chunks = max(d // 32, 1)
+    if routed_to_ref:
+        # the ref path reports the full chunk count for every tile
+        assert (np.asarray(iters) == n_chunks).all()
+
+
 def test_suffix_chunk_norms_definition(rng):
     x = jnp.asarray(rng.standard_normal((8, 96)).astype(np.float32))
     out = suffix_chunk_norms(x, 32)
