@@ -46,9 +46,18 @@ class BlockedJoinConfig:
         return time_horizon(self.theta, self.lam)
 
     def to_engine(self, micro_batch: int | None = None) -> EngineConfig:
+        # tile_k = block_q·block_w makes level-1 selection lossless, so the
+        # wrapper's historical contract survives: the only way to lose a
+        # pair is the max_pairs budget, and that raises (see push).  The
+        # wrapper also pins join_impl="pallas": it is the kernel-faithful
+        # facade, and its pruning telemetry (chunks_executed/tiles_total,
+        # consumed by benchmarks/tile_pruning.py) only exists in the kernel
+        # — the engine's compiled CPU default ("scan") does not prune.
         return EngineConfig(
             theta=self.theta, lam=self.lam, capacity=self.capacity, d=self.d,
             micro_batch=micro_batch or self.block_q, max_pairs=self.max_pairs,
+            tile_k=self.block_q * self.block_w,
+            join_impl=None if self.use_ref else "pallas",
             block_q=self.block_q, block_w=self.block_w, chunk_d=self.chunk_d,
             use_ref=self.use_ref,
         )

@@ -54,13 +54,15 @@ class DedupFilter:
     """Streaming near-duplicate filter over document embeddings (paper §1,
     application #2), backed by the device-resident SSSJ engine.
 
-    ``max_pairs`` is sized to the lossless bound ``block·(capacity+block)``
-    — a correct keep-mask needs *every* pair (a dropped pair could be a
-    row's only duplicate evidence), so emission must never truncate here.
-    At this bound the compacted buffers can exceed the dense matrices they
-    replace (the filter trades the engine's bandwidth win for a loss-proof
-    mask); the planned per-row match-mask emission (ROADMAP) restores
-    O(B) traffic for this consumer.
+    A keep-mask only needs "does row i have a ≥ θ match" — not the matches
+    themselves — so this consumer rides the engine's per-row match mask
+    (DESIGN.md §3): a ``(micro_batch,)`` boolean derived from level-1 emit
+    counts, exact regardless of candidate-buffer capacity.  This removes
+    the old lossless bound ``max_pairs = block·(capacity+block)`` (under
+    which the compacted buffers could exceed the dense matrices they
+    replaced): pair emission is vestigial here, its buffers are held at
+    the minimum, and any pair-drop counters that fire are irrelevant to
+    correctness — host traffic is O(block) per push.
     """
 
     def __init__(
@@ -73,7 +75,7 @@ class DedupFilter:
     ) -> None:
         self.cfg = EngineConfig(
             theta=theta, lam=lam, capacity=capacity, d=dim,
-            micro_batch=block, max_pairs=block * (capacity + block),
+            micro_batch=block, max_pairs=8, tile_k=8,
             block_q=block, block_w=block, chunk_d=min(dim, 128),
         )
         self.engine = StreamEngine(self.cfg)
@@ -84,13 +86,11 @@ class DedupFilter:
     def filter(self, tokens: np.ndarray, ts: np.ndarray) -> np.ndarray:
         """Returns a boolean keep-mask for the batch of documents."""
         emb = hashing_embed(tokens, self.dim)
-        uids = self.engine.push(emb, ts)
-        ua, ub, _ = self.engine.drain_arrays()
-        # drop the *newer* item of each similar pair (uid_a is the newer one)
-        newer = np.maximum(ua, ub) - int(uids[0])
-        newer = newer[(newer >= 0) & (newer < tokens.shape[0])]
-        keep = np.ones(tokens.shape[0], bool)
-        keep[newer] = False
+        self.engine.push(emb, ts)
+        # the mask marks the *newer* item of each similar pair (the join's
+        # uid-order mask makes the query side strictly newer)
+        _, _, _, matched = self.engine.drain_arrays(return_masks=True)
+        keep = ~matched
         self.n_seen += tokens.shape[0]
         self.n_dropped += int((~keep).sum())
         return keep

@@ -10,26 +10,39 @@ time filtering, and verification never leave the index's hot loop:
   * the ring-buffer :class:`WindowState` is carried through a single
     ``lax.scan`` over micro-batches (one jit call — and one device
     round-trip of *control*, not data — per request batch, donated state);
-  * emission is compacted on device (:mod:`repro.kernels.sssj_join.compact`)
-    so only fixed-capacity ``(max_pairs,)`` buffers plus a few scalars ever
-    cross to the host — O(pairs) bytes instead of O(B·capacity);
-  * the host drain is asynchronous: :meth:`StreamEngine.push` enqueues the
-    device buffers and returns without synchronizing; pairs materialize on
-    the host only when the caller asks (:meth:`drain_arrays` /
-    :meth:`drain_pairs`), so back-to-back pushes pipeline on the device.
+  * emission is **hierarchically compacted** on device (DESIGN.md §3): each
+    kernel tile selects its own ≥ θ entries into a ``(tile_k,)`` candidate
+    buffer (level 1, inside the join), and a segmented scan + gather merges
+    the per-tile buffers into the global ``(max_pairs,)``
+    :class:`~repro.kernels.sssj_join.compact.PairBuffer` (level 2) — the
+    dense ``(B, capacity)`` score matrix is never written to HBM and
+    nothing ever sorts ``O(B·capacity)`` elements.  The PR-1 dense pipeline
+    survives behind ``emit_dense=True`` as the test oracle;
+  * a per-row **match mask** (``row i has ≥ θ match``, exact even under
+    candidate overflow) rides along for consumers that only need
+    membership, not pairs (e.g. the dedup filter) — O(B) with no
+    truncation risk;
+  * the host drain is asynchronous *and off-thread*: :meth:`StreamEngine
+    .push` dispatches the scan and hands the device buffers to a
+    single-worker copy thread, so the D2H copies of batch *n* overlap the
+    device compute of batch *n+1*; pairs materialize on the host only when
+    the caller asks (:meth:`drain_arrays` / :meth:`drain_pairs`).
 
-Telemetry (pruning iterations, emitted/dropped pair counts, overflow)
-accumulates in-carry as device scalars and is summed on the host only at
+Telemetry (pruning iterations, emitted pair counts, and the per-level drop
+counters — ``tile_k`` overflow vs ``max_pairs`` overflow) accumulates
+in-carry as device scalars and is summed on the host only at
 :meth:`stats` time.
 
 The scan body (:func:`make_micro_step`) and the host facade
 (:class:`StreamEngineBase`) are shared with the sharded fan-out
 (:mod:`repro.engine.sharded`): the sharded variant differs only in which
-rows each device ingests and in emitting self-join pairs on one shard.
+rows each device ingests, in emitting self-join pairs on one shard, and in
+adding a third merge level (per-shard buffers → one global budget).
 """
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 from typing import Callable, List, NamedTuple, Optional, Tuple
 
@@ -38,7 +51,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.similarity import time_horizon
-from ..kernels.sssj_join import PairBuffer, compact_pairs, sssj_join_tiles
+from ..kernels.sssj_join import (
+    PairBuffer,
+    compact_pairs,
+    concat_candidates,
+    merge_candidates,
+    sssj_join_candidates,
+    sssj_join_tiles,
+)
 from .window import WindowState, init_window, push_with_overflow
 
 __all__ = [
@@ -59,9 +79,14 @@ class EngineConfig:
     d: int
     micro_batch: int = 128       # scan step size; requests are padded up
     max_pairs: int = 4096        # compacted-emission capacity per micro-batch
+    tile_k: int = 256            # level-1 candidates kept per kernel tile
+    shard_k: Optional[int] = None  # per-shard merge capacity (sharded engine);
+    #                                None → max_pairs
     block_q: int = 128
     block_w: int = 128
     chunk_d: int = 128
+    emit_dense: bool = False     # PR-1 dense-matrix compaction (test oracle)
+    join_impl: Optional[str] = None  # candidate impl: pallas/scan/dense; None=auto
     use_ref: bool = False        # route joins through the jnp oracle
     interpret: Optional[bool] = None
 
@@ -71,10 +96,23 @@ class EngineConfig:
 
     @property
     def join_kwargs(self) -> dict:
+        """kwargs for the dense-emission join (``emit_dense`` oracle path)."""
         return dict(
             theta=self.theta, lam=self.lam, block_q=self.block_q,
             block_w=self.block_w, chunk_d=self.chunk_d, use_ref=self.use_ref,
             interpret=self.interpret,
+        )
+
+    @property
+    def candidate_kwargs(self) -> dict:
+        """kwargs for the hierarchical join (default path)."""
+        impl = self.join_impl
+        if impl is None and self.use_ref:
+            impl = "dense"
+        return dict(
+            theta=self.theta, lam=self.lam, tile_k=self.tile_k,
+            block_q=self.block_q, block_w=self.block_w, chunk_d=self.chunk_d,
+            impl=impl, interpret=self.interpret,
         )
 
 
@@ -84,19 +122,22 @@ class EngineTelemetry(NamedTuple):
     ``chunks``/``tiles`` count the *window* join only (self-join tiles have
     near-zero time deltas and would dilute the pruning signal) — the same
     accounting the pre-engine driver used, so ``benchmarks/tile_pruning.py``
-    numbers stay comparable across versions.
+    numbers stay comparable across versions.  Drops are split by level so
+    an operator can tell an undersized ``tile_k`` from an undersized
+    ``max_pairs``.
     """
 
     chunks: jax.Array        # () i32 — d-chunks executed (pruning telemetry)
     tiles: jax.Array         # () i32 — window-join tiles visited
-    pairs: jax.Array         # () i32 — pairs emitted (compacted)
-    dropped: jax.Array       # () i32 — pairs lost to max_pairs overflow
+    pairs: jax.Array         # () i32 — pairs emitted (compacted, post-merge)
+    dropped: jax.Array       # () i32 — pairs lost to the max_pairs budget
+    dropped_tile: jax.Array  # () i32 — pairs lost to per-tile/per-shard caps
 
 
 def init_telemetry() -> EngineTelemetry:
     # distinct buffers: the step donates the whole pytree, and donating one
     # buffer twice is an error
-    return EngineTelemetry(*(jnp.zeros((), jnp.int32) for _ in range(4)))
+    return EngineTelemetry(*(jnp.zeros((), jnp.int32) for _ in range(5)))
 
 
 def pad_request(vecs, ts, next_uid: int, micro_batch: int):
@@ -106,7 +147,8 @@ def pad_request(vecs, ts, next_uid: int, micro_batch: int):
     one), and reshape into scan inputs.
 
     Returns ``(uq, qs, tqs, uqs, nvs)``: the assigned uids ``(b,)`` plus
-    the scan stacks ``(n_micro, mb, ·)`` and valid-row counts ``(n_micro,)``.
+    the scan stacks ``(n_micro, mb, ·)`` and valid-row counts ``(n_micro,)``
+    (``nvs`` stays a host array — the drain needs it to unpad row masks).
     """
     vecs = np.asarray(vecs, np.float32)
     ts = np.asarray(ts, np.float32).reshape(-1)
@@ -128,23 +170,28 @@ def pad_request(vecs, ts, next_uid: int, micro_batch: int):
         jnp.asarray(vecs.reshape(n_micro, mb, -1)),
         jnp.asarray(ts.reshape(n_micro, mb)),
         jnp.asarray(uq_in.reshape(n_micro, mb)),
-        jnp.asarray(nvs),
+        nvs,
     )
 
 
 def make_micro_step(
     cfg: EngineConfig,
     ingest: Callable,
-    self_mask: Optional[Callable[[jax.Array], jax.Array]] = None,
+    self_mask: Optional[Callable] = None,
 ):
     """Build the scan body shared by the single-device and sharded engines.
 
     ``ingest(state, q, tq, uq, n_valid, t_max) → new state`` pushes this
     micro-batch (or the shard's slice of it) into the ring with overflow
-    accounting; ``self_mask`` optionally zeroes the within-batch scores
-    (the sharded engine emits them on one shard only).
+    accounting; ``self_mask`` optionally suppresses the within-batch
+    candidates (``PairCandidates → PairCandidates``; the sharded engine
+    emits them on one shard only).  The step emits ``(PairBuffer,
+    row_mask (mb,) bool)`` per micro-batch.
     """
     kw = cfg.join_kwargs
+    ckw = cfg.candidate_kwargs
+    if cfg.emit_dense and self_mask is not None:
+        raise ValueError("emit_dense oracle path is single-device only")
 
     def micro_step(carry, xs):
         state, telem = carry
@@ -153,15 +200,29 @@ def make_micro_step(
         uq = uq.astype(jnp.int32)
         # join vs the window and within the micro-batch; padded rows carry
         # uid = -1 so the kernel's order mask silences them everywhere
-        s_win, it_win, _ = sssj_join_tiles(
-            q, state.vecs, tq, state.ts, uq, state.uids, **kw
-        )
-        s_self, _, _ = sssj_join_tiles(q, q, tq, tq, uq, uq, **kw)
-        if self_mask is not None:
-            s_self = self_mask(s_self)
-        scores = jnp.concatenate([s_win, s_self], axis=1)
-        uw_all = jnp.concatenate([state.uids, uq])
-        buf = compact_pairs(scores, uq, uw_all, max_pairs=cfg.max_pairs)
+        if cfg.emit_dense:
+            # PR-1 oracle: dense (mb, capacity+mb) scores + global top-k
+            s_win, it_win, _ = sssj_join_tiles(
+                q, state.vecs, tq, state.ts, uq, state.uids, **kw
+            )
+            s_self, _, _ = sssj_join_tiles(q, q, tq, tq, uq, uq, **kw)
+            scores = jnp.concatenate([s_win, s_self], axis=1)
+            uw_all = jnp.concatenate([state.uids, uq])
+            buf = compact_pairs(scores, uq, uw_all, max_pairs=cfg.max_pairs)
+            row_mask = jnp.any(scores > 0.0, axis=1)
+        else:
+            # hierarchical: per-tile level-1 candidates → segmented merge;
+            # no dense score matrix exists anywhere on this path
+            jw = sssj_join_candidates(
+                q, state.vecs, tq, state.ts, uq, state.uids, **ckw
+            )
+            js = sssj_join_candidates(q, q, tq, tq, uq, uq, **ckw)
+            cs = js.cands if self_mask is None else self_mask(js.cands)
+            buf = merge_candidates(
+                concat_candidates(jw.cands, cs), max_pairs=cfg.max_pairs
+            )
+            row_mask = jw.row_mask | js.row_mask
+            it_win = jw.iters
 
         # newest valid arrival — the reference point for live-slot overflow
         lanes = jnp.arange(q.shape[0], dtype=jnp.int32)
@@ -172,8 +233,9 @@ def make_micro_step(
             tiles=telem.tiles + it_win.size,
             pairs=telem.pairs + buf.n_pairs,
             dropped=telem.dropped + buf.n_dropped,
+            dropped_tile=telem.dropped_tile + buf.n_dropped_tile,
         )
-        return (new_state, new_telem), buf
+        return (new_state, new_telem), (buf, row_mask)
 
     return micro_step
 
@@ -181,10 +243,11 @@ def make_micro_step(
 def make_batch_step(cfg: EngineConfig):
     """Build the jitted request-batch step (single device).
 
-    Signature: ``(state, telem, qs, tqs, uqs, nvs) → (state, telem, bufs)``
-    with ``qs (n_micro, mb, d)``, ``tqs/uqs (n_micro, mb)``, ``nvs
-    (n_micro,)`` valid-row counts, and ``bufs`` a :class:`PairBuffer` whose
-    leaves are stacked over micro-batches.  State and telemetry are donated.
+    Signature: ``(state, telem, qs, tqs, uqs, nvs) → (state, telem, bufs,
+    masks)`` with ``qs (n_micro, mb, d)``, ``tqs/uqs (n_micro, mb)``,
+    ``nvs (n_micro,)`` valid-row counts, ``bufs`` a :class:`PairBuffer`
+    whose leaves are stacked over micro-batches, and ``masks (n_micro, mb)``
+    the per-row match masks.  State and telemetry are donated.
     """
     tau = cfg.tau
 
@@ -194,10 +257,10 @@ def make_batch_step(cfg: EngineConfig):
     micro_step = make_micro_step(cfg, ingest)
 
     def batch_step(state, telem, qs, tqs, uqs, nvs):
-        (state, telem), bufs = jax.lax.scan(
+        (state, telem), (bufs, masks) = jax.lax.scan(
             micro_step, (state, telem), (qs, tqs, uqs, nvs)
         )
-        return state, telem, bufs
+        return state, telem, bufs, masks
 
     return jax.jit(batch_step, donate_argnums=(0, 1))
 
@@ -206,17 +269,30 @@ class StreamEngineBase:
     """Host facade shared by the single-device and sharded engines.
 
     Subclasses set ``state``, ``telem``, and ``_step`` in ``__init__`` and
-    override :meth:`_global_capacity`.  Compacted buffers may carry one
-    segment (single device) or one per shard; ``drain_arrays`` handles both
-    through the trailing-axis reshape.
+    override :meth:`_global_capacity`.  Compacted buffers carry one merged
+    segment per micro-batch (the sharded engine merges its shards down to
+    one global buffer before they reach the host); ``drain_arrays`` still
+    handles multi-segment layouts through the trailing-axis reshape.
+
+    D2H copies run on a single-worker copy thread: ``push`` dispatches the
+    device step and enqueues the output buffers; the worker materializes
+    them to numpy (double-buffered — device compute of the next push
+    overlaps the copy of the previous one); ``drain_*`` only joins on the
+    already-copied results.
     """
 
     def __init__(self, cfg: EngineConfig) -> None:
         if cfg.max_pairs < 1:
             raise ValueError("max_pairs must be ≥ 1")
+        if cfg.tile_k < 1:
+            raise ValueError("tile_k must be ≥ 1")
         self.cfg = cfg
         self._next_uid = 0
-        self._pending: List[PairBuffer] = []
+        # futures of host-materialized (bufs, masks, nvs, nbytes) records
+        self._pending: List[concurrent.futures.Future] = []
+        self._copier = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="sssj-drain"
+        )
         self.n_items = 0
         # host↔device traffic accounting (what the dense path would have
         # moved vs what the compacted path actually moves)
@@ -242,10 +318,10 @@ class StreamEngineBase:
         )
         self._next_uid += b
         self.n_items += b
-        self.state, self.telem, bufs = self._step(
+        self.state, self.telem, bufs, masks = self._step(
             self.state, self.telem, qs, tqs, uqs, nvs
         )
-        self._pending.append(bufs)
+        self._pending.append(self._copier.submit(self._fetch, bufs, masks, nvs))
         # the dense path would have fetched (mb, capacity) + (mb, mb) f32
         # score matrices per micro-batch
         mb = self.cfg.micro_batch
@@ -254,39 +330,74 @@ class StreamEngineBase:
         )
         return uq
 
+    @staticmethod
+    def _fetch(bufs: PairBuffer, masks, nvs: np.ndarray):
+        """Worker-thread D2H: materialize one push's device outputs."""
+        host = jax.tree.map(np.asarray, bufs)
+        masks = np.asarray(masks)
+        nbytes = sum(x.nbytes for x in host) + masks.nbytes
+        return host, masks, nvs, nbytes
+
     # ------------------------------------------------------------------ #
-    def drain_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Synchronize and return ``(uid_a, uid_b, score)`` arrays for every
-        pair emitted since the last drain (uid_a is the newer item)."""
-        mp = self.cfg.max_pairs
-        ua_all, ub_all, sc_all = [], [], []
-        for bufs in self._pending:
+    def _drain(self):
+        recs = [f.result() for f in self._pending]
+        self._pending.clear()
+        ua_all, ub_all, sc_all, mk_all = [], [], [], []
+        for bufs, masks, nvs, nbytes in recs:
+            self.bytes_to_host += nbytes
             n = np.asarray(bufs.n_pairs)
             n = n.reshape(n.shape[0], -1)             # (n_micro, n_segments)
-            ua = np.asarray(bufs.uid_a).reshape(n.shape[0], -1)
-            ub = np.asarray(bufs.uid_b).reshape(n.shape[0], -1)
-            sc = np.asarray(bufs.score).reshape(n.shape[0], -1)
-            self.bytes_to_host += ua.nbytes + ub.nbytes + sc.nbytes + n.nbytes
-            for i in range(n.shape[0]):
-                for s in range(n.shape[1]):
-                    k = int(n[i, s])
-                    ua_all.append(ua[i, s * mp: s * mp + k])
-                    ub_all.append(ub[i, s * mp: s * mp + k])
-                    sc_all.append(sc[i, s * mp: s * mp + k])
-        self._pending.clear()
+            n_micro, n_seg = n.shape
+            width = bufs.uid_a.reshape(n_micro, -1).shape[1] // n_seg
+            sel = np.arange(width)[None, None, :] < n[:, :, None]
+            # row-major (micro, segment, rank) flatten == stream order
+            ua_all.append(bufs.uid_a.reshape(n_micro, n_seg, width)[sel])
+            ub_all.append(bufs.uid_b.reshape(n_micro, n_seg, width)[sel])
+            sc_all.append(bufs.score.reshape(n_micro, n_seg, width)[sel])
+            lanes = np.arange(masks.shape[1])[None, :]
+            mk_all.append(masks[lanes < nvs[:, None]])
         if not ua_all:
             z = np.empty((0,), np.int32)
-            return z, z.copy(), np.empty((0,), np.float32)
+            return z, z.copy(), np.empty((0,), np.float32), np.empty((0,), bool)
         return (
             np.concatenate(ua_all),
             np.concatenate(ub_all),
             np.concatenate(sc_all),
+            np.concatenate(mk_all).astype(bool),
         )
+
+    def drain_arrays(
+        self, return_masks: bool = False
+    ) -> Tuple[np.ndarray, ...]:
+        """Collect everything emitted since the last drain.
+
+        Returns ``(uid_a, uid_b, score)`` arrays for every pair (uid_a is
+        the newer item).  With ``return_masks=True`` a fourth array rides
+        along: a ``(n_items,)`` bool per-row match mask, aligned with the
+        uids handed out by the intervening :meth:`push` calls — exact even
+        when pair emission overflowed (it derives from level-1 counts,
+        DESIGN.md §3).
+        """
+        ua, ub, sc, mk = self._drain()
+        if return_masks:
+            return ua, ub, sc, mk
+        return ua, ub, sc
 
     def drain_pairs(self) -> List[Tuple[int, int, float]]:
         """Compatibility drain: list of ``(uid_a, uid_b, score)`` tuples."""
         ua, ub, sc = self.drain_arrays()
         return list(zip(ua.tolist(), ub.tolist(), sc.tolist()))
+
+    def close(self) -> None:
+        """Release the drain worker thread; undrained copies are abandoned
+        (the worker finishes any copy already in flight, then exits)."""
+        self._copier.shutdown(wait=False)
+
+    def __del__(self) -> None:
+        try:
+            self._copier.shutdown(wait=False)
+        except Exception:
+            pass
 
     # ------------------------------------------------------------------ #
     @property
@@ -296,8 +407,12 @@ class StreamEngineBase:
 
     @property
     def pairs_dropped(self) -> int:
-        """Pairs lost to ``max_pairs`` emission overflow (undersized buffer)."""
-        return int(np.asarray(self.telem.dropped).sum())
+        """Total pairs lost to emission capacity at any level (tile_k,
+        per-shard, or max_pairs) — the undersized-buffer signal."""
+        t = self.telem
+        return int(
+            np.asarray(t.dropped).sum() + np.asarray(t.dropped_tile).sum()
+        )
 
     def stats(self) -> dict:
         t = jax.tree.map(lambda x: int(np.asarray(x).sum()), self.telem)
@@ -306,7 +421,9 @@ class StreamEngineBase:
             "chunks_executed": t.chunks,
             "tiles_total": t.tiles,
             "pairs_emitted": t.pairs,
-            "pairs_dropped": t.dropped,
+            "pairs_dropped": t.dropped + t.dropped_tile,
+            "pairs_dropped_budget": t.dropped,
+            "pairs_dropped_tile": t.dropped_tile,
             "window_overflow": self.overflow,
             "bytes_to_host": self.bytes_to_host,
             "bytes_dense_equiv": self.bytes_dense_equiv,

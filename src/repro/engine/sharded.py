@@ -15,16 +15,28 @@ the engine's shared scan body — :func:`repro.engine.engine.make_micro_step`):
     raw-vector traffic between devices after the initial broadcast;
   * within-batch pairs are computed everywhere (inputs are replicated) but
     emitted by shard 0 only, so each pair appears exactly once globally;
-  * each device compacts its emissions locally into a ``(max_pairs,)``
-    buffer (:mod:`repro.kernels.sssj_join.compact`) and the buffers are
-    **gathered** by the ``out_specs`` — host traffic stays O(pairs);
+  * compaction is **three-level hierarchical** (DESIGN.md §3/§5): kernel
+    tiles select ``(tile_k,)`` candidates (level 1, inside the join), each
+    device merges its tiles into a ``(shard_k,)`` buffer (level 2, inside
+    ``shard_map``), and after the ``out_specs`` gather one more segmented
+    merge packs the per-shard buffers into a single global ``(max_pairs,)``
+    buffer — so ``max_pairs`` is a **global** budget, not per-shard, and
+    host traffic per micro-batch is O(max_pairs) however many shards exist.
+    Per-row match masks are OR-reduced over shards the same way;
   * arrivals are dealt round-robin (item *i* lands on shard ``i mod P``),
     so each shard's ring ages uniformly and eviction stays time-ordered
     per shard.
+
+Every drop stays attributed to its level: ``tile_k`` overflow accumulates
+in-scan (``dropped_tile``), ``shard_k`` overflow accumulates in-scan
+(``dropped``), and global-merge losses are folded into ``dropped`` (with
+the in-scan ``pairs`` counter corrected down) after the gather, so
+``pairs_emitted`` always equals what the drain actually delivers.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -32,7 +44,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..distributed.sharding import AxisRules, DEFAULT_RULES, shard_map
-from ..kernels.sssj_join import PairBuffer
+from ..kernels.sssj_join import PairBuffer, PairCandidates, merge_candidates
 from .engine import (
     EngineConfig,
     EngineTelemetry,
@@ -73,14 +85,25 @@ def init_sharded_window(cfg: EngineConfig, mesh: Mesh, axis: str) -> WindowState
 
 def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
     """Jitted shard_map step with the same signature as
-    :func:`repro.engine.engine.make_batch_step`; per-shard telemetry and
-    pair buffers come back concatenated over the window axis."""
+    :func:`repro.engine.engine.make_batch_step`: per-shard buffers are
+    merged into one global ``(max_pairs,)`` buffer per micro-batch and
+    masks are OR-reduced over shards before anything reaches the host."""
 
+    if cfg.emit_dense:
+        raise ValueError(
+            "emit_dense is the single-device test oracle; the sharded engine "
+            "runs the hierarchical path only"
+        )
     p = mesh.shape[axis]
     if cfg.micro_batch % p != 0:
         raise ValueError(f"micro_batch {cfg.micro_batch} not divisible by {p} shards")
     tau = cfg.tau
     bl = cfg.micro_batch // p         # arrivals per shard per micro-batch
+    shard_k = cfg.shard_k or cfg.max_pairs
+    # level-2 (per-shard) merge capacity: the in-scan micro step merges this
+    # shard's tiles into a (shard_k,) buffer; the global budget is applied
+    # after the gather
+    local_cfg = dataclasses.replace(cfg, max_pairs=shard_k)
 
     def local_batch(state, telem, qs, tqs, uqs, nvs):
         me = jax.lax.axis_index(axis)
@@ -93,50 +116,86 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
                 st, q[idx], tq[idx], uq[idx], n_valid_l, t_max, tau
             )
 
-        # replicated inputs ⇒ every shard computes the same self scores;
-        # only shard 0 emits them so each pair appears once globally
-        micro = make_micro_step(
-            cfg, ingest, self_mask=lambda s: jnp.where(me == 0, s, 0.0)
-        )
+        # replicated inputs ⇒ every shard computes the same self candidates;
+        # only shard 0 keeps them so each pair appears once globally (counts
+        # are zeroed, not dropped — suppression is not an overflow).  Row
+        # masks stay unmasked: they are identical on every shard and OR'd.
+        def self_mask(c: PairCandidates) -> PairCandidates:
+            keep = (me == 0).astype(jnp.int32)
+            return c._replace(kept=c.kept * keep, emitted=c.emitted * keep)
+
+        micro = make_micro_step(local_cfg, ingest, self_mask=self_mask)
 
         # per-shard scalars travel as (1,) slices of the P(axis) arrays
         sub = state._replace(cursor=state.cursor[0], overflow=state.overflow[0])
         tl = jax.tree.map(lambda x: x[0], telem)
-        (sub, tl), bufs = jax.lax.scan(micro, (sub, tl), (qs, tqs, uqs, nvs))
+        (sub, tl), (bufs, masks) = jax.lax.scan(micro, (sub, tl), (qs, tqs, uqs, nvs))
         state = sub._replace(cursor=sub.cursor[None], overflow=sub.overflow[None])
         telem = jax.tree.map(lambda x: x[None], tl)
         # scalar leaves come out of the scan as (n_micro,); give them a
-        # trailing axis so out_specs can concatenate shards along it
+        # trailing axis so out_specs can concatenate shards along it, and
+        # masks a middle axis so shards gather side by side
         bufs = bufs._replace(
-            n_pairs=bufs.n_pairs[:, None], n_dropped=bufs.n_dropped[:, None]
+            n_pairs=bufs.n_pairs[:, None],
+            n_dropped=bufs.n_dropped[:, None],
+            n_dropped_tile=bufs.n_dropped_tile[:, None],
         )
-        return state, telem, bufs
+        return state, telem, bufs, masks[:, None, :]
 
     state_specs = WindowState(
         vecs=P(axis, None), ts=P(axis), uids=P(axis),
         cursor=P(axis), overflow=P(axis),
     )
-    telem_specs = EngineTelemetry(P(axis), P(axis), P(axis), P(axis))
+    telem_specs = EngineTelemetry(*(P(axis) for _ in EngineTelemetry._fields))
     buf_specs = PairBuffer(
         uid_a=P(None, axis), uid_b=P(None, axis), score=P(None, axis),
         n_pairs=P(None, axis), n_dropped=P(None, axis),
+        n_dropped_tile=P(None, axis),
     )
     fn = shard_map(
         local_batch,
         mesh=mesh,
         in_specs=(state_specs, telem_specs, P(), P(), P(), P()),
-        out_specs=(state_specs, telem_specs, buf_specs),
+        out_specs=(state_specs, telem_specs, buf_specs, P(None, axis, None)),
         check_vma=False,
     )
-    return jax.jit(fn, donate_argnums=(0, 1))
+
+    def shard_merge(ua, ub, sc, kept):
+        """Level 3: gathered per-shard buffers → one global budget."""
+        cands = PairCandidates(
+            uid_a=ua.reshape(p, shard_k),
+            uid_b=ub.reshape(p, shard_k),
+            score=sc.reshape(p, shard_k),
+            kept=kept,
+            emitted=kept,   # shard-level losses were already counted in-scan
+        )
+        return merge_candidates(cands, max_pairs=cfg.max_pairs)
+
+    def batch_step(state, telem, qs, tqs, uqs, nvs):
+        state, telem, bufs, masks = fn(state, telem, qs, tqs, uqs, nvs)
+        gbufs = jax.vmap(shard_merge)(
+            bufs.uid_a, bufs.uid_b, bufs.score, bufs.n_pairs
+        )
+        # the in-scan `pairs` counter summed per-shard survivors; pairs that
+        # just fell to the global budget move to `dropped`
+        merge_drops = jnp.sum(gbufs.n_dropped)
+        telem = telem._replace(
+            pairs=telem.pairs.at[0].add(-merge_drops),
+            dropped=telem.dropped.at[0].add(merge_drops),
+        )
+        return state, telem, gbufs, jnp.any(masks, axis=1)
+
+    return jax.jit(batch_step, donate_argnums=(0, 1))
 
 
 class ShardedStreamEngine(StreamEngineBase):
     """Host facade mirroring :class:`StreamEngine` over a device mesh.
 
     ``cfg.capacity`` is the *per-shard* ring size; the global window holds
-    ``capacity × n_shards`` items.  Per-shard compacted buffers are gathered,
-    so ``drain_arrays`` sees ``n_shards × max_pairs`` slots per micro-batch.
+    ``capacity × n_shards`` items.  ``cfg.max_pairs`` is the **global**
+    emission budget per micro-batch (the hierarchical merge packs shard
+    buffers down to it), and ``cfg.shard_k`` bounds what a single shard may
+    contribute (default: ``max_pairs``).
     """
 
     def __init__(

@@ -1,3 +1,18 @@
-from .compact import PairBuffer, compact_pairs, tile_emit_counts  # noqa: F401
-from .ops import sssj_join_scores, sssj_join_tiles, suffix_chunk_norms, NEG_UID  # noqa: F401
+from .compact import (  # noqa: F401
+    PairBuffer,
+    PairCandidates,
+    compact_pairs,
+    concat_candidates,
+    merge_candidates,
+    tile_candidates,
+    tile_emit_counts,
+)
+from .ops import (  # noqa: F401
+    JoinCandidates,
+    NEG_UID,
+    sssj_join_candidates,
+    sssj_join_scores,
+    sssj_join_tiles,
+    suffix_chunk_norms,
+)
 from .ref import sssj_join_ref  # noqa: F401

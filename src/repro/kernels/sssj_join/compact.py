@@ -1,26 +1,36 @@
-"""On-device pair compaction: dense thresholded scores → (uid_a, uid_b, s).
+"""Hierarchical on-device pair compaction: tile candidates → packed pairs.
 
-Stage 2 + 3 of the compaction pipeline (DESIGN.md §3).  The join kernel
-emits a dense thresholded score matrix (zeros everywhere a pair was pruned
-or below θ) plus per-tile emit counts (stage 1).  This module turns that
-matrix into a fixed-capacity compacted buffer *without leaving the device*:
+Level 2 of the two-level compaction pipeline (DESIGN.md §3).  Level 1 lives
+with the join itself (the Pallas kernel, or its jnp mirrors in ops.py):
+each (block_q, block_w) tile selects its own ≥θ entries into a fixed
+``(tile_k,)`` candidate buffer plus a true-emit count — dead tiles (the
+common case under time filtering) contribute a zero count and nothing
+else.  This module merges those ragged per-segment buffers into the global
+fixed-capacity :class:`PairBuffer` with a **segmented exclusive scan over
+per-segment counts plus one gather** — there is no element-wise sort over
+``Q·W`` anywhere, and the dense score matrix is never an input.
 
-  stage 2 — **exclusive scan**: per-segment counts are scanned to produce
-            each segment's base offset in the output buffer;
-  stage 3 — **gather/scatter**: every emitted entry knows its destination
-            ``base_offset + within-segment rank`` and is scattered into the
-            ``(max_pairs,)`` buffers; entries past ``max_pairs`` are dropped
-            and counted (the overflow contract).
+The same merge primitive is applied twice in the sharded engine: per-tile
+buffers → per-shard buffer inside ``shard_map``, then per-shard buffers →
+one global ``(max_pairs,)`` buffer after the gather, which is what makes
+``max_pairs`` a *global* budget (DESIGN.md §5).
 
-Segments here are matrix rows (one query each): a row is the natural tile
-at compaction granularity, and its count/scan/rank are pure VPU work.  The
-kernel's per-(BQ, BW)-tile counts are the same quantity at MXU-tile
-granularity and are used for telemetry and cross-checking (tests assert
-``tile_counts.sum() == n_pairs + n_dropped``).
+Drop accounting is per level and never silent:
 
-Everything is shape-static and jit-safe, so the whole join → compact →
-fetch path fuses into one XLA program and only ``O(max_pairs)`` bytes —
-not the dense ``(B, capacity)`` matrix — ever cross the PCIe boundary.
+  * ``PairCandidates.emitted - PairCandidates.kept`` — entries lost to the
+    ``tile_k`` (or per-shard) candidate capacity;
+  * ``PairBuffer.n_dropped`` — entries lost to the global ``max_pairs``
+    budget at the merge;
+  * ``PairBuffer.n_dropped_tile`` — upstream per-segment losses, carried so
+    the lossless contract stays auditable end to end
+    (``true pairs == n_pairs + n_dropped + n_dropped_tile``).
+
+``compact_pairs`` (the PR-1 dense-matrix global-top-k compaction) is kept
+verbatim as the test oracle for the ``emit_dense=True`` engine path.
+
+Everything is shape-static and jit-safe, so join → select → merge → fetch
+fuses into one XLA program and only ``O(max_pairs)`` bytes ever cross the
+PCIe boundary.
 """
 
 from __future__ import annotations
@@ -30,7 +40,31 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["PairBuffer", "compact_pairs", "tile_emit_counts"]
+__all__ = [
+    "PairBuffer",
+    "PairCandidates",
+    "compact_pairs",
+    "concat_candidates",
+    "merge_candidates",
+    "tile_candidates",
+    "tile_emit_counts",
+]
+
+
+class PairCandidates(NamedTuple):
+    """Ragged per-segment candidate buffers (level-1 output, a pytree).
+
+    A *segment* is a kernel tile (or, at the sharded engine's second merge
+    level, one device's compacted buffer).  Each segment holds its first
+    ``kept ≤ K`` emitted pairs in stream (row-major) order; slots past
+    ``kept`` are inert (``uid = -1``, ``score = 0``).
+    """
+
+    uid_a: jax.Array    # (S, K) i32 — query-side uid, -1 in unused slots
+    uid_b: jax.Array    # (S, K) i32 — window-side uid
+    score: jax.Array    # (S, K) f32 — decayed similarity, 0 in unused slots
+    kept: jax.Array     # (S,) i32 — valid entries per segment (≤ K)
+    emitted: jax.Array  # (S,) i32 — true ≥θ count per segment (≥ kept)
 
 
 class PairBuffer(NamedTuple):
@@ -39,14 +73,132 @@ class PairBuffer(NamedTuple):
     uid_a: jax.Array     # (max_pairs,) i32 — query-side uid, -1 beyond n_pairs
     uid_b: jax.Array     # (max_pairs,) i32 — window-side uid, -1 beyond n_pairs
     score: jax.Array     # (max_pairs,) f32 — decayed similarity, 0 beyond n_pairs
-    n_pairs: jax.Array   # () i32 — valid entries = min(total emitted, max_pairs)
-    n_dropped: jax.Array  # () i32 — entries lost to capacity (overflow flag > 0)
+    n_pairs: jax.Array   # () i32 — valid entries = min(total kept, max_pairs)
+    n_dropped: jax.Array       # () i32 — entries lost to max_pairs (this merge)
+    n_dropped_tile: jax.Array  # () i32 — entries lost upstream to per-segment
+    #                                     (tile_k / per-shard) capacity
 
     @property
     def overflowed(self) -> jax.Array:
-        return self.n_dropped > 0
+        return (self.n_dropped + self.n_dropped_tile) > 0
 
 
+def _segmented_take(counts: jax.Array, seg_cap: int, out_cap: int):
+    """Destination plan for packing ragged segments into a dense prefix.
+
+    Given per-segment valid counts (each ≤ ``seg_cap``), returns
+    ``(src, valid, total)`` where ``src[s]`` is the flat index (into the
+    ``(S·seg_cap,)`` row-major segment buffer) of the s-th surviving entry,
+    ``valid[s]`` marks ``s < min(total, out_cap)``, and ``total`` is the sum
+    of counts.  Pure scan + binary search + gather — O(S + out_cap·log S),
+    no sort, regardless of how many elements the segments describe.
+    """
+    counts = counts.astype(jnp.int32)
+    n_seg = counts.shape[0]
+    cum = jnp.cumsum(counts)                                   # inclusive
+    total = cum[-1]
+    s = jnp.arange(out_cap, dtype=jnp.int32)
+    # segment holding global rank s = first seg whose inclusive cum > s
+    seg = jnp.clip(
+        jnp.searchsorted(cum, s, side="right"), 0, n_seg - 1
+    ).astype(jnp.int32)
+    base = cum[seg] - counts[seg]                              # exclusive scan
+    valid = s < jnp.minimum(total, out_cap)
+    src = seg * seg_cap + (s - base)
+    return jnp.where(valid, src, 0), valid, total
+
+
+def merge_candidates(cands: PairCandidates, *, max_pairs: int) -> PairBuffer:
+    """Level-2 merge: ragged per-segment candidates → packed pair buffer.
+
+    Survivors are the earliest pairs in (segment, within-segment) order;
+    everything lost — here to ``max_pairs`` or upstream to per-segment
+    capacity — is counted, never silent.
+    """
+    n_seg, seg_cap = cands.uid_a.shape
+    kept = jnp.minimum(cands.kept.astype(jnp.int32), seg_cap)
+    src, valid, total = _segmented_take(kept, seg_cap, max_pairs)
+    uid_a = jnp.where(valid, cands.uid_a.reshape(-1)[src], -1).astype(jnp.int32)
+    uid_b = jnp.where(valid, cands.uid_b.reshape(-1)[src], -1).astype(jnp.int32)
+    score = jnp.where(valid, cands.score.reshape(-1)[src], 0.0).astype(jnp.float32)
+    n_pairs = jnp.minimum(total, max_pairs).astype(jnp.int32)
+    return PairBuffer(
+        uid_a=uid_a,
+        uid_b=uid_b,
+        score=score,
+        n_pairs=n_pairs,
+        n_dropped=(total - n_pairs).astype(jnp.int32),
+        n_dropped_tile=jnp.sum(cands.emitted - kept).astype(jnp.int32),
+    )
+
+
+def concat_candidates(*cands: PairCandidates) -> PairCandidates:
+    """Stack candidate sets (e.g. window join + self join) along the
+    segment axis; all must share the same per-segment capacity K."""
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *cands)
+
+
+# --------------------------------------------------------------------- #
+# jnp mirror of the kernel's level-1 tile selection (ref path + oracle)
+# --------------------------------------------------------------------- #
+def tile_candidates(
+    scores: jax.Array,   # (Q, W) f32 — 0 where no pair, ≥ θ where emitted
+    uq: jax.Array,       # (Q,) i32 query uids
+    uw: jax.Array,       # (W,) i32 window uids aligned with score columns
+    *,
+    block_q: int,
+    block_w: int,
+    tile_k: int,
+) -> tuple[PairCandidates, jax.Array]:
+    """Per-(block_q, block_w)-tile candidate selection from a dense matrix.
+
+    The jnp mirror of the kernel's level-1 stage, bit-compatible with it
+    (same row-major within-tile order, same tile order), used by the dense
+    ref path and as the oracle in tests.  Returns ``(candidates, row_mask)``
+    with ``row_mask (Q,)`` = "row has ≥1 emitted entry" (exact even when
+    ``tile_k`` overflows — it is derived from counts, not survivors).
+    Scan + binary search + gather per tile; no sort.
+    """
+    Q, W = scores.shape
+    pq, pw = (-Q) % block_q, (-W) % block_w
+    s = jnp.pad(scores, ((0, pq), (0, pw)))
+    uqp = jnp.pad(uq.astype(jnp.int32), (0, pq), constant_values=-1)
+    uwp = jnp.pad(uw.astype(jnp.int32), (0, pw), constant_values=-1)
+    nq, nw = (Q + pq) // block_q, (W + pw) // block_w
+    n = block_q * block_w
+    # (nq, nw, block_q, block_w) tiles, flattened row-major within the tile
+    tiles = s.reshape(nq, block_q, nw, block_w).transpose(0, 2, 1, 3)
+    flat = tiles.reshape(nq * nw, n)
+    mask = flat > 0.0
+    cum = jnp.cumsum(mask.astype(jnp.int32), axis=1)           # (S, n)
+    emitted = cum[:, -1]
+    kept = jnp.minimum(emitted, tile_k)
+    target = jnp.arange(tile_k, dtype=jnp.int32) + 1
+    # src[s, k] = first in-tile flat position with inclusive count ≥ k+1
+    src = jax.vmap(lambda c: jnp.searchsorted(c, target, side="left"))(cum)
+    src = jnp.minimum(src, n - 1).astype(jnp.int32)
+    valid = target[None, :] <= kept[:, None]
+    sel_score = jnp.where(valid, jnp.take_along_axis(flat, src, axis=1), 0.0)
+    # in-tile (i, j) → global (qi, wi) → uids
+    ti = jnp.arange(nq * nw, dtype=jnp.int32)[:, None] // nw
+    tj = jnp.arange(nq * nw, dtype=jnp.int32)[:, None] % nw
+    qi = ti * block_q + src // block_w
+    wi = tj * block_w + src % block_w
+    uid_a = jnp.where(valid, uqp[qi], -1)
+    uid_b = jnp.where(valid, uwp[wi], -1)
+    cands = PairCandidates(
+        uid_a=uid_a, uid_b=uid_b, score=sel_score.astype(jnp.float32),
+        kept=kept, emitted=emitted,
+    )
+    row_mask = jnp.any(
+        (s > 0.0).reshape(nq * block_q, nw * block_w), axis=1
+    )[:Q]
+    return cands, row_mask
+
+
+# --------------------------------------------------------------------- #
+# PR-1 dense-matrix compaction — retained as the emit_dense test oracle
+# --------------------------------------------------------------------- #
 def compact_pairs(
     scores: jax.Array,   # (Q, W) f32 — 0 where no pair, ≥ θ where emitted
     uq: jax.Array,       # (Q,) i32 query uids
@@ -54,23 +206,18 @@ def compact_pairs(
     *,
     max_pairs: int,
 ) -> PairBuffer:
-    """Count → scan-select → gather, entirely on device.
+    """Dense-oracle compaction: one stable ``lax.top_k`` over the whole
+    emit mask (ties break toward the lower index, i.e. stream order).
 
-    The scan+select is expressed as a stable ``lax.top_k`` over the emit
-    mask: ties break toward the lower index, so the returned indices are
-    exactly the first ``max_pairs`` emitted positions in stream order —
-    the same destinations an explicit exclusive-scan-of-counts would
-    assign, but as one fused gather instead of a large scatter (XLA CPU
-    serializes scatters; top_k + gather also maps better onto the TPU's
-    sort unit).
+    This is the path the hierarchical pipeline replaced — it materializes
+    the dense matrix and sorts ``Q·W`` elements — kept only behind
+    ``emit_dense=True`` so tests can assert the two paths agree
+    pair-for-pair whenever no drop counter fires.
     """
     Q, W = scores.shape
     mask = scores > 0.0
-    # stage 1: per-segment counts (the kernel already produced these per
-    # MXU tile — recomputed at row granularity, still device-resident)
     counts = jnp.sum(mask, axis=1, dtype=jnp.int32)            # (Q,)
     total = jnp.sum(counts)
-    # stage 2+3: select the first max_pairs emitted positions and gather
     k = min(max_pairs, Q * W)
     hit, idx = jax.lax.top_k(mask.ravel().astype(jnp.float32), k)
     valid = hit > 0.0
@@ -85,12 +232,15 @@ def compact_pairs(
         uid_b = jnp.concatenate([uid_b, jnp.full((pad,), -1, jnp.int32)])
         score = jnp.concatenate([score, jnp.zeros((pad,), jnp.float32)])
     n_pairs = jnp.minimum(total, max_pairs).astype(jnp.int32)
-    return PairBuffer(uid_a, uid_b, score, n_pairs, (total - n_pairs).astype(jnp.int32))
+    return PairBuffer(
+        uid_a, uid_b, score, n_pairs,
+        (total - n_pairs).astype(jnp.int32), jnp.zeros((), jnp.int32),
+    )
 
 
 def tile_emit_counts(scores: jax.Array, block_q: int, block_w: int) -> jax.Array:
     """Per-(block_q, block_w)-tile emit counts from a dense score matrix —
-    the jnp mirror of the kernel's stage-1 output, for the ref path."""
+    the jnp mirror of the kernel's stage-1 count output, for the ref path."""
     Q, W = scores.shape
     pq, pw = (-Q) % block_q, (-W) % block_w
     s = jnp.pad(scores, ((0, pq), (0, pw)))

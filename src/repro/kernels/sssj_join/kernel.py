@@ -25,16 +25,25 @@ Grid: ``(n_q_tiles, n_w_tiles)``.  Each program owns one (BQ, BW) output
 tile; the full feature dimension of both tiles is staged in VMEM and
 consumed chunk by chunk so the early exit saves real MXU work.
 
-VMEM footprint per program ≈ (BQ + BW)·d·bytes + BQ·BW·4.  With the default
-BQ = BW = 128, d ≤ 8192 this stays within a v5e core's ~16 MB VMEM budget
-for bf16 inputs; wider models should shrink BQ/BW or shard d (see ops.py).
+Two emission variants share the score computation (``_tile_scores``):
 
-Outputs: the score tile, a per-tile iteration count (number of d-chunks
-actually executed) — the TPU analogue of the paper's "entries traversed"
-instrumentation (Figs. 2/6) — and a per-tile count of emitted (≥ θ) entries,
-which is stage 1 of the on-device pair compaction pipeline (DESIGN.md §3):
-count per tile → exclusive scan for offsets → gather into a fixed-capacity
-pair buffer, so only O(pairs) bytes ever cross to the host.
+  * :func:`sssj_join_kernel_call` — the PR-1 dense variant: writes the full
+    thresholded ``(Q, W)`` score tile to HBM plus per-tile emit counts.
+    Retained as the ``emit_dense`` oracle path.
+  * :func:`sssj_join_candidates_kernel_call` — level 1 of the hierarchical
+    compaction (DESIGN.md §3): each program selects its own ≥ θ entries
+    into a fixed ``(tile_k,)`` candidate buffer of (in-tile index, score)
+    pairs via a rank scan (row-wise cumulative counts) + branchless binary
+    search — **no sort, and no dense tile ever leaves VMEM**.  Dead tiles
+    (the common case under time filtering) write only a zero count and the
+    inert-slot fill, so HBM output is ``O(n_tiles · tile_k)`` instead of
+    ``4·Q·W`` bytes.  A per-row hit bitmap (exact even when ``tile_k``
+    overflows) rides along for the O(B) match-mask consumers.
+
+VMEM footprint per program ≈ (BQ + BW)·d·bytes + BQ·BW·4 (+ tile_k·8 for
+the candidate variant).  With the default BQ = BW = 128, d ≤ 8192 this
+stays within a v5e core's ~16 MB VMEM budget for bf16 inputs; wider models
+should shrink BQ/BW or shard d (see ops.py).
 """
 
 from __future__ import annotations
@@ -45,16 +54,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["sssj_join_kernel_call"]
+__all__ = ["sssj_join_kernel_call", "sssj_join_candidates_kernel_call"]
 
 NEG_UID = -1  # uid marking empty / padded slots
 
 
-def _kernel(
+def _tile_scores(
     q_ref, w_ref, tq_ref, tw_ref, uq_ref, uw_ref, sqq_ref, sqw_ref,
-    out_ref, iters_ref, counts_ref,
     *, theta: float, lam: float, chunk_d: int, n_chunks: int,
+    bq: int, bw: int,
 ):
+    """Shared per-tile score computation: thresholded decayed similarities
+    for one (BQ, BW) tile, with tile-level time filtering and the chunked
+    ℓ2 early exit.  Returns ``(emitted (BQ, BW) f32, k_final () i32)``."""
     f32 = jnp.float32
     tq = tq_ref[:, 0].astype(f32)              # (BQ,)
     tw = tw_ref[:, 0].astype(f32)              # (BW,)
@@ -71,8 +83,6 @@ def _kernel(
 
     # --- time filtering at tile granularity (paper §3 / §6.2) ---
     tile_alive = jnp.max(decay) >= theta       # dot ≤ 1 ⇒ decayed ≤ decay
-
-    bq, bw = out_ref.shape
 
     def cond(state):
         k, _, live = state
@@ -99,10 +109,100 @@ def _kernel(
 
     scores = acc * decay
     emitted = jnp.where(scores >= theta, scores, 0.0)
+    return emitted, k_final
+
+
+def _kernel(
+    q_ref, w_ref, tq_ref, tw_ref, uq_ref, uw_ref, sqq_ref, sqw_ref,
+    out_ref, iters_ref, counts_ref,
+    *, theta: float, lam: float, chunk_d: int, n_chunks: int,
+):
+    bq, bw = out_ref.shape
+    emitted, k_final = _tile_scores(
+        q_ref, w_ref, tq_ref, tw_ref, uq_ref, uw_ref, sqq_ref, sqw_ref,
+        theta=theta, lam=lam, chunk_d=chunk_d, n_chunks=n_chunks,
+        bq=bq, bw=bw,
+    )
     out_ref[...] = emitted
     iters_ref[0, 0] = k_final
     # stage 1 of pair compaction: how many entries this tile will emit
     counts_ref[0, 0] = jnp.sum((emitted > 0.0).astype(jnp.int32))
+
+
+def _cand_kernel(
+    q_ref, w_ref, tq_ref, tw_ref, uq_ref, uw_ref, sqq_ref, sqw_ref,
+    idx_ref, score_ref, emitted_ref, rowhits_ref, iters_ref,
+    *, theta: float, lam: float, chunk_d: int, n_chunks: int, tile_k: int,
+):
+    """Level-1 hierarchical compaction: select this tile's ≥ θ entries.
+
+    Rank assignment is a scan (row-wise cumulative counts + a row-offset
+    scan), and slot filling is a branchless binary search over the
+    monotone flattened count vector — the inverse permutation of an
+    exclusive-scan scatter, expressed as a gather because TPU (and XLA CPU)
+    handle a ``tile_k``-sized gather far better than a ``BQ·BW``-sized
+    scatter.  Dead tiles skip the search entirely.
+    """
+    bq = q_ref.shape[0]
+    bw = w_ref.shape[0]
+    n = bq * bw
+    emitted, k_final = _tile_scores(
+        q_ref, w_ref, tq_ref, tw_ref, uq_ref, uw_ref, sqq_ref, sqw_ref,
+        theta=theta, lam=lam, chunk_d=chunk_d, n_chunks=n_chunks,
+        bq=bq, bw=bw,
+    )
+    iters_ref[0, 0] = k_final
+
+    m = (emitted > 0.0).astype(jnp.int32)          # (BQ, BW)
+    crow = jnp.cumsum(m, axis=1)                   # inclusive within-row
+    row_tot = crow[:, -1:]                         # (BQ, 1)
+    rowhits_ref[0, 0, :] = (row_tot[:, 0] > 0).astype(jnp.int32)
+    row_base = jnp.cumsum(row_tot, axis=0) - row_tot   # exclusive over rows
+    count = row_base[-1, 0] + row_tot[-1, 0]
+    emitted_ref[0, 0] = count
+
+    @pl.when(count == 0)
+    def _():
+        idx_ref[0, 0, :] = jnp.full((tile_k,), -1, jnp.int32)
+        score_ref[0, 0, :] = jnp.zeros((tile_k,), jnp.float32)
+
+    @pl.when(count > 0)
+    def _():
+        # c_flat[e] = # of emitted entries at flat positions ≤ e (row-major);
+        # monotone non-decreasing, so "the slot-s entry lives at the first e
+        # with c_flat[e] ≥ s+1" is a binary search, not a sort.
+        c_flat = (crow + row_base).reshape(n)
+        target = jax.lax.broadcasted_iota(jnp.int32, (tile_k, 1), 0)[:, 0] + 1
+        lo = jnp.zeros((tile_k,), jnp.int32)
+        step = 1
+        while step < n:
+            step <<= 1
+        while step:
+            cand = lo + step
+            # c_flat[cand - 1] < target ⇒ the answer lies at or past cand
+            cval = c_flat[jnp.minimum(cand, n) - 1]
+            lo = jnp.where((cand <= n) & (cval < target), cand, lo)
+            step >>= 1
+        kept = jnp.minimum(count, tile_k)
+        valid = target <= kept                     # i.e. slot < kept
+        src = jnp.minimum(lo, n - 1)
+        idx_ref[0, 0, :] = jnp.where(valid, src, -1).astype(jnp.int32)
+        score_ref[0, 0, :] = jnp.where(
+            valid, emitted.reshape(n)[src], 0.0
+        ).astype(jnp.float32)
+
+
+def _join_in_specs(block_q: int, block_w: int, d: int, n_chunks: int):
+    return [
+        pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),        # q
+        pl.BlockSpec((block_w, d), lambda i, j: (j, 0)),        # w
+        pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),        # tq
+        pl.BlockSpec((block_w, 1), lambda i, j: (j, 0)),        # tw
+        pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),        # uq
+        pl.BlockSpec((block_w, 1), lambda i, j: (j, 0)),        # uw
+        pl.BlockSpec((block_q, n_chunks), lambda i, j: (i, 0)), # sqq
+        pl.BlockSpec((block_w, n_chunks), lambda i, j: (j, 0)), # sqw
+    ]
 
 
 def sssj_join_kernel_call(
@@ -122,7 +222,7 @@ def sssj_join_kernel_call(
     chunk_d: int,
     interpret: bool,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Raw pallas_call; shapes must already be padded to block multiples.
+    """Dense-emission pallas_call; shapes must be padded to block multiples.
 
     Returns ``(scores (Q, W), iters (nQ, nW), counts (nQ, nW))`` where
     ``counts`` is the per-tile number of emitted (≥ θ) entries.
@@ -140,16 +240,6 @@ def sssj_join_kernel_call(
         jax.ShapeDtypeStruct(grid, jnp.int32),
         jax.ShapeDtypeStruct(grid, jnp.int32),
     ]
-    in_specs = [
-        pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),        # q
-        pl.BlockSpec((block_w, d), lambda i, j: (j, 0)),        # w
-        pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),        # tq
-        pl.BlockSpec((block_w, 1), lambda i, j: (j, 0)),        # tw
-        pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),        # uq
-        pl.BlockSpec((block_w, 1), lambda i, j: (j, 0)),        # uw
-        pl.BlockSpec((block_q, n_chunks), lambda i, j: (i, 0)), # sqq
-        pl.BlockSpec((block_w, n_chunks), lambda i, j: (j, 0)), # sqw
-    ]
     out_specs = [
         pl.BlockSpec((block_q, block_w), lambda i, j: (i, j)),
         pl.BlockSpec((1, 1), lambda i, j: (i, j)),
@@ -158,7 +248,65 @@ def sssj_join_kernel_call(
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=in_specs,
+        in_specs=_join_in_specs(block_q, block_w, d, n_chunks),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, w, tq, tw, uq, uw, sqq, sqw)
+
+
+def sssj_join_candidates_kernel_call(
+    q: jax.Array,        # (Q, d)
+    w: jax.Array,        # (W, d)
+    tq: jax.Array,       # (Q, 1) f32
+    tw: jax.Array,       # (W, 1) f32
+    uq: jax.Array,       # (Q, 1) i32
+    uw: jax.Array,       # (W, 1) i32
+    sqq: jax.Array,      # (Q, n_chunks) f32
+    sqw: jax.Array,      # (W, n_chunks) f32
+    *,
+    theta: float,
+    lam: float,
+    block_q: int,
+    block_w: int,
+    chunk_d: int,
+    tile_k: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Hierarchical (level-1) pallas_call; no dense ``(Q, W)`` output exists.
+
+    Returns ``(cand_idx (nQ, nW, tile_k) i32 in-tile row-major flat index or
+    -1, cand_score (nQ, nW, tile_k) f32, emitted (nQ, nW) i32 true per-tile
+    ≥ θ counts, row_hits (nQ, nW, block_q) i32 0/1, iters (nQ, nW) i32)``.
+    """
+    Q, d = q.shape
+    W, _ = w.shape
+    n_chunks = d // chunk_d
+    nq, nw = Q // block_q, W // block_w
+    grid = (nq, nw)
+
+    kernel = functools.partial(
+        _cand_kernel, theta=theta, lam=lam, chunk_d=chunk_d,
+        n_chunks=n_chunks, tile_k=tile_k,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((nq, nw, tile_k), jnp.int32),
+        jax.ShapeDtypeStruct((nq, nw, tile_k), jnp.float32),
+        jax.ShapeDtypeStruct(grid, jnp.int32),
+        jax.ShapeDtypeStruct((nq, nw, block_q), jnp.int32),
+        jax.ShapeDtypeStruct(grid, jnp.int32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, tile_k), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((1, 1, tile_k), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        pl.BlockSpec((1, 1, block_q), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=_join_in_specs(block_q, block_w, d, n_chunks),
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,

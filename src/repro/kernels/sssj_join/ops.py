@@ -5,21 +5,53 @@ pruning bounds), backend auto-detection (interpret mode off-TPU), routing
 of sub-block inputs through the jnp reference (a `pallas_call` on a
 smaller-than-one-block problem only pays padding + launch overhead), and
 unpadding of the outputs.
+
+Two join surfaces:
+
+  * :func:`sssj_join_tiles` — dense emission: the thresholded ``(Q, W)``
+    score matrix plus per-tile telemetry.  This is the PR-1 path, retained
+    as the ``emit_dense`` oracle; it materializes O(Q·W) bytes.
+  * :func:`sssj_join_candidates` — hierarchical emission (DESIGN.md §3):
+    per-tile ``(tile_k,)`` candidate buffers with true-emit counts and a
+    per-row hit mask.  Three interchangeable implementations produce
+    bit-identical candidate buffers:
+
+      - ``"pallas"`` — the level-1 select inside the TPU kernel
+        (``kernel.sssj_join_candidates_kernel_call``); the dense tile
+        never leaves VMEM.
+      - ``"scan"``   — a ``lax.scan`` over window tiles in plain jnp: one
+        ``(Q, block_w)`` score block live at a time, selected per tile and
+        discarded.  The compiled CPU/GPU default — no interpret-mode
+        overhead and still no ``(Q, W)`` allocation.
+      - ``"dense"``  — the jnp oracle: full ``(Q, W)`` ref scores, then
+        :func:`repro.kernels.sssj_join.compact.tile_candidates`.  Used for
+        sub-block inputs and as the ground truth in tests.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .compact import tile_emit_counts
-from .kernel import NEG_UID, sssj_join_kernel_call
+from .compact import PairCandidates, tile_candidates, tile_emit_counts
+from .kernel import (
+    NEG_UID,
+    sssj_join_candidates_kernel_call,
+    sssj_join_kernel_call,
+)
 from .ref import sssj_join_ref
 
-__all__ = ["sssj_join_scores", "sssj_join_tiles", "suffix_chunk_norms", "NEG_UID"]
+__all__ = [
+    "JoinCandidates",
+    "sssj_join_candidates",
+    "sssj_join_scores",
+    "sssj_join_tiles",
+    "suffix_chunk_norms",
+    "NEG_UID",
+]
 
 
 def suffix_chunk_norms(x: jax.Array, chunk_d: int) -> jax.Array:
@@ -146,3 +178,216 @@ def sssj_join_scores(*args, **kw) -> tuple[jax.Array, jax.Array]:
     """Back-compat wrapper of :func:`sssj_join_tiles` without tile counts."""
     scores, iters, _ = sssj_join_tiles(*args, **kw)
     return scores, iters
+
+
+# --------------------------------------------------------------------- #
+# hierarchical emission
+# --------------------------------------------------------------------- #
+class JoinCandidates(NamedTuple):
+    """Level-1 join output: per-tile candidates + exact per-row hit mask.
+
+    ``cands`` segments are tiles in (q-tile, w-tile) row-major order, each
+    holding its first ``kept`` ≥ θ pairs in within-tile row-major (stream)
+    order.  ``row_mask (Q,)`` is exact even when ``tile_k`` overflows: it
+    derives from counts, not survivors.  ``iters (nQ, nW)`` is the pruning
+    telemetry (d-chunks executed; full count on the jnp impls, which do
+    not prune).
+    """
+
+    cands: PairCandidates
+    row_mask: jax.Array
+    iters: jax.Array
+
+
+def _kernel_candidates(cand_idx, cand_score, emitted, uqp, uwp, block_q, block_w):
+    """Decode the kernel's in-tile flat indices into uid-level candidates."""
+    nq, nw, K = cand_idx.shape
+    valid = cand_idx >= 0
+    idx = jnp.maximum(cand_idx, 0)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (nq, nw, K), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (nq, nw, K), 1)
+    qi = ti * block_q + idx // block_w
+    wi = tj * block_w + idx % block_w
+    uid_a = jnp.where(valid, uqp[qi], -1)
+    uid_b = jnp.where(valid, uwp[wi], -1)
+    t = nq * nw
+    return PairCandidates(
+        uid_a=uid_a.reshape(t, K),
+        uid_b=uid_b.reshape(t, K),
+        score=jnp.where(valid, cand_score, 0.0).reshape(t, K),
+        kept=jnp.minimum(emitted, K).reshape(t),
+        emitted=emitted.reshape(t),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "theta", "lam", "tile_k", "block_q", "block_w", "chunk_d",
+        "impl", "interpret",
+    ),
+)
+def sssj_join_candidates(
+    q: jax.Array,
+    w: jax.Array,
+    tq: jax.Array,
+    tw: jax.Array,
+    uq: jax.Array,
+    uw: jax.Array,
+    *,
+    theta: float,
+    lam: float,
+    tile_k: int = 256,
+    block_q: int = 128,
+    block_w: int = 128,
+    chunk_d: int = 128,
+    impl: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> JoinCandidates:
+    """Blocked join with hierarchical (level-1) emission — no dense matrix.
+
+    Args mirror :func:`sssj_join_tiles`; ``tile_k`` caps the candidates a
+    single (block_q, block_w) tile may keep (overflow is counted in
+    ``cands.emitted - cands.kept``, never silent).  ``impl`` picks the
+    implementation (``"pallas"`` / ``"scan"`` / ``"dense"``, see module
+    docstring); ``None`` auto-selects: the Pallas kernel on TPU, the
+    compiled tile-scan elsewhere.  Sub-block inputs always take the dense
+    jnp oracle — same candidate buffers, and the dense matrix they briefly
+    materialize is smaller than one kernel tile.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "scan"
+    tq = tq.reshape(-1).astype(jnp.float32)
+    tw = tw.reshape(-1).astype(jnp.float32)
+    uq = uq.reshape(-1).astype(jnp.int32)
+    uw = uw.reshape(-1).astype(jnp.int32)
+
+    Q, d = q.shape
+    W, _ = w.shape
+    # sub-block inputs take the dense oracle (a kernel/scan launch would be
+    # all padding); d < chunk_d only matters to the kernel's d-chunking —
+    # the scan impl does not chunk d and stays on its no-dense-matrix path
+    if Q < block_q or W < block_w or (d < chunk_d and impl != "scan"):
+        impl = "dense"
+
+    if impl == "dense":
+        scores = sssj_join_ref(
+            q, w, tq[:, None], tw[:, None], uq[:, None], uw[:, None],
+            theta=theta, lam=lam,
+        )
+        cands, row_mask = tile_candidates(
+            scores, uq, uw, block_q=block_q, block_w=block_w, tile_k=tile_k
+        )
+        n_chunks = max(d // chunk_d, 1)
+        iters = jnp.full(
+            ((Q + block_q - 1) // block_q, (W + block_w - 1) // block_w),
+            n_chunks,
+            jnp.int32,
+        )
+        return JoinCandidates(cands=cands, row_mask=row_mask, iters=iters)
+
+    if d % chunk_d != 0:
+        pad_d = (-d) % chunk_d
+        q = jnp.pad(q, ((0, 0), (0, pad_d)))
+        w = jnp.pad(w, ((0, 0), (0, pad_d)))
+        d += pad_d
+    qp = _pad_rows(q, block_q)
+    wp = _pad_rows(w, block_w)
+    tqp = _pad_rows(tq, block_q)
+    twp = _pad_rows(tw, block_w)
+    uqp = _pad_rows(uq, block_q, fill=NEG_UID)
+    uwp = _pad_rows(uw, block_w, fill=NEG_UID)
+    Qp, Wp = qp.shape[0], wp.shape[0]
+    nq, nw = Qp // block_q, Wp // block_w
+
+    if impl == "pallas":
+        sqq = suffix_chunk_norms(qp, chunk_d)
+        sqw = suffix_chunk_norms(wp, chunk_d)
+        cand_idx, cand_score, emitted, row_hits, iters = (
+            sssj_join_candidates_kernel_call(
+                qp, wp, tqp[:, None], twp[:, None],
+                uqp[:, None], uwp[:, None], sqq, sqw,
+                theta=theta, lam=lam, block_q=block_q, block_w=block_w,
+                chunk_d=chunk_d, tile_k=tile_k, interpret=interpret,
+            )
+        )
+        cands = _kernel_candidates(
+            cand_idx, cand_score, emitted, uqp, uwp, block_q, block_w
+        )
+        row_mask = jnp.any(row_hits > 0, axis=1).reshape(Qp)[:Q]
+        return JoinCandidates(cands=cands, row_mask=row_mask, iters=iters)
+
+    if impl != "scan":
+        raise ValueError(f"unknown sssj_join_candidates impl {impl!r}")
+
+    # --- "scan": one (Qp, block_w) score block live at a time ----------- #
+    w_tiles = wp.reshape(nw, block_w, d)
+    tw_tiles = twp.reshape(nw, block_w)
+    uw_tiles = uwp.reshape(nw, block_w)
+    qf = qp.astype(jnp.float32)
+    tq2 = tqp.astype(jnp.float32)
+    # strip-filter extremes come from the UNPADDED timestamps: _pad_rows
+    # fills tq with 0.0, which would pin tq_lo to 0 and disable the
+    # older-than-horizon bound for any ragged Q (padded rows carry
+    # uid = -1 and can never emit, so excluding them is sound)
+    tq_lo, tq_hi = jnp.min(tq), jnp.max(tq)
+    n_chunks = d // chunk_d
+
+    def live(args):
+        wt, twt, uwt = args
+        sims = qf @ wt.astype(jnp.float32).T                       # (Qp, BW)
+        dec = sims * jnp.exp(-lam * jnp.abs(tq2[:, None] - twt[None, :]))
+        order = (uwt[None, :] >= 0) & (uqp[:, None] > uwt[None, :])
+        dec = jnp.where(order & (dec >= theta), dec, 0.0)
+        cands_t, rm = tile_candidates(
+            dec, uqp, uwt, block_q=block_q, block_w=block_w, tile_k=tile_k
+        )
+        return cands_t, rm
+
+    def dead(args):
+        _, _, uwt = args
+        z = jnp.zeros((nq,), jnp.int32)
+        cands_t = PairCandidates(
+            uid_a=jnp.full((nq, tile_k), -1, jnp.int32),
+            uid_b=jnp.full((nq, tile_k), -1, jnp.int32),
+            score=jnp.zeros((nq, tile_k), jnp.float32),
+            kept=z, emitted=z,
+        )
+        return cands_t, jnp.zeros((Qp,), bool)
+
+    def step(_, xs):
+        wt, twt, uwt = xs
+        # tile-level time filter (paper §3, the kernel's first prune, here
+        # column-strip granularity): a lower bound on min |Δt| from the
+        # strips' time extremes.  Empty ring slots carry t = +3e30, so a
+        # fully-empty strip is dead by construction; unit vectors ⇒
+        # dot ≤ 1 ⇒ score ≤ exp(-λ·Δt).  Dead strips cost O(Q + block_w):
+        # per-arrival work tracks the τ-horizon, not the window capacity.
+        dt_lb = jnp.maximum(
+            0.0, jnp.maximum(tq_lo - jnp.max(twt), jnp.min(twt) - tq_hi)
+        )
+        alive = (jnp.exp(-lam * dt_lb) >= theta) & (jnp.max(uwt) >= 0)
+        cands_t, rm = jax.lax.cond(alive, live, dead, (wt, twt, uwt))
+        return None, (cands_t, rm, alive)
+
+    _, (col_cands, col_masks, col_alive) = jax.lax.scan(
+        step, None, (w_tiles, tw_tiles, uw_tiles)
+    )
+    # stacked leaves are (nw, nq, ...): reorder segments to (nq, nw) tile-
+    # row-major so all impls emit identical buffers
+    def reorder(x):
+        return jnp.swapaxes(
+            x.reshape((nw, nq) + x.shape[2:]), 0, 1
+        ).reshape((nq * nw,) + x.shape[2:])
+
+    cands = jax.tree.map(reorder, col_cands)
+    row_mask = jnp.any(col_masks, axis=0)[:Q]
+    # pruning telemetry at the same granularity as the kernel's: dead
+    # strips execute zero d-chunks (the strip bound is coarser than the
+    # kernel's per-pair decay max, so this may overcount live tiles)
+    iters = jnp.broadcast_to(
+        jnp.where(col_alive, n_chunks, 0)[None, :], (nq, nw)
+    ).astype(jnp.int32)
+    return JoinCandidates(cands=cands, row_mask=row_mask, iters=iters)

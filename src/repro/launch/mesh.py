@@ -18,7 +18,16 @@ from typing import Optional
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax ≥ 0.6: meshes carry explicit/auto axis types
+    from jax.sharding import AxisType
+
+    def _mesh(grid, axes) -> Mesh:
+        return Mesh(grid, axes, axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:  # jax 0.4.x: every axis is implicitly "auto"
+    def _mesh(grid, axes) -> Mesh:
+        return Mesh(grid, axes)
 
 __all__ = ["make_production_mesh", "make_mesh_for"]
 
@@ -41,4 +50,4 @@ def make_mesh_for(shape, axes) -> Mesh:
             "importing jax (see launch/dryrun.py)?"
         )
     grid = np.asarray(devs[:n]).reshape(shape)
-    return Mesh(grid, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(grid, axes)

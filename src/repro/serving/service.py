@@ -77,14 +77,20 @@ class SSSJService:
         block: int = 64,
         max_pairs: int = 4096,
         strict: bool = True,
+        tile_k: Optional[int] = None,
     ) -> None:
         """``strict`` keeps the pre-engine lossless contract: a request
-        whose emission overflows ``max_pairs`` raises instead of silently
-        grouping on a truncated pair set.  Pass ``strict=False`` to accept
-        best-effort grouping and watch ``stats.pairs_dropped``."""
+        whose emission overflows — the global ``max_pairs`` budget or a
+        per-tile ``tile_k`` candidate buffer — raises instead of silently
+        grouping on a truncated pair set.  Strict mode therefore defaults
+        ``tile_k`` to the lossless ``block²`` so the budget is the only
+        way to lose a pair; pass ``strict=False`` to accept best-effort
+        grouping (smaller ``tile_k``, watch ``stats.pairs_dropped``)."""
+        if tile_k is None:
+            tile_k = block * block if strict else 256
         cfg = EngineConfig(
             theta=theta, lam=lam, capacity=capacity, d=dim,
-            micro_batch=block, max_pairs=max_pairs,
+            micro_batch=block, max_pairs=max_pairs, tile_k=tile_k,
             block_q=block, block_w=block, chunk_d=min(dim, 128),
         )
         self.engine = StreamEngine(cfg)

@@ -1,0 +1,274 @@
+"""Hierarchical compaction vs the dense oracle, property-based.
+
+The contract under test (DESIGN.md §3):
+
+  * whenever no drop counter fires, the hierarchical path (level-1 tile
+    selection → level-2 segmented merge) reproduces the dense-oracle pair
+    set **pair-for-pair and score-for-score**, across random shapes,
+    thresholds, decay rates, and tile/budget capacities;
+  * when a capacity does overflow — ``tile_k`` at level 1 or ``max_pairs``
+    at level 2 — every lost pair is counted at its level, the counters sum
+    exactly (``survivors + dropped_tile + dropped_budget == true pairs``),
+    and the survivors are a prefix-ordered subset of the true pair set;
+  * the per-row match mask is exact regardless of any overflow.
+
+The three join implementations ("dense" jnp oracle, "scan" tile-scan, and
+the "pallas" kernel in interpret mode) must emit identical candidate
+buffers (scores up to kernel float accumulation order).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:  # optional dev dependency: richer search when present, fixed sweep not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.kernels.sssj_join import (  # noqa: E402
+    compact_pairs,
+    merge_candidates,
+    sssj_join_candidates,
+    sssj_join_ref,
+    sssj_join_tiles,
+    tile_candidates,
+)
+
+
+def _stream(rng, Q, W, d, clustered):
+    """Query/window batch with a controllable amount of near-duplicates."""
+    q = rng.standard_normal((Q, d)).astype(np.float32)
+    w = rng.standard_normal((W, d)).astype(np.float32)
+    if clustered:
+        n = min(Q, W) // 2
+        w[:n] = q[:n] + 0.02 * rng.standard_normal((n, d)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    w /= np.linalg.norm(w, axis=1, keepdims=True)
+    tq = np.sort(rng.random(Q)).astype(np.float32) + 0.5
+    tw = np.sort(rng.random(W)).astype(np.float32)
+    uq = np.arange(1000, 1000 + Q, dtype=np.int32)
+    uw = np.arange(W, dtype=np.int32)
+    uw[::5] = -1                          # empty ring slots
+    return map(jnp.asarray, (q, w, tq, tw, uq, uw))
+
+
+def _dense_truth(scores, uq, uw):
+    s = np.asarray(scores)
+    qi, wi = np.nonzero(s)
+    uq, uw = np.asarray(uq), np.asarray(uw)
+    return {
+        (int(uq[a]), int(uw[b])): float(s[a, b]) for a, b in zip(qi, wi)
+    }
+
+
+def _buffer_pairs(buf):
+    n = int(buf.n_pairs)
+    return {
+        (int(a), int(b)): float(s)
+        for a, b, s in zip(
+            np.asarray(buf.uid_a)[:n],
+            np.asarray(buf.uid_b)[:n],
+            np.asarray(buf.score)[:n],
+        )
+    }
+
+
+def _check_hierarchical_vs_oracle(
+    seed, q_tiles, w_tiles, ragged, theta, lam, tile_k, max_pairs, clustered
+):
+    """Exactness when nothing drops; exact per-level accounting when it
+    does — across shapes, parameters, and both overflow boundaries."""
+    rng = np.random.default_rng(seed)
+    B = 32
+    Q, W = q_tiles * B, w_tiles * B
+    if ragged:                       # exercise padding in both dimensions
+        Q, W = Q - 7, W - 5
+    q, w, tq, tw, uq, uw = _stream(rng, Q, W, 64, clustered)
+
+    scores, _, _ = sssj_join_tiles(
+        q, w, tq, tw, uq, uw,
+        theta=theta, lam=lam, block_q=B, block_w=B, chunk_d=32,
+    )
+    truth = _dense_truth(scores, uq, uw)
+
+    jc = sssj_join_candidates(
+        q, w, tq, tw, uq, uw,
+        theta=theta, lam=lam, tile_k=tile_k, block_q=B, block_w=B,
+        chunk_d=32, impl="scan" if seed % 2 else "dense",
+    )
+    buf = merge_candidates(jc.cands, max_pairs=max_pairs)
+    got = _buffer_pairs(buf)
+    n_budget, n_tile = int(buf.n_dropped), int(buf.n_dropped_tile)
+
+    # drop counters always sum exactly — nothing is lost silently
+    assert len(got) + n_budget + n_tile == len(truth)
+    assert int(np.asarray(jc.cands.emitted).sum()) == len(truth)
+    # survivors are true pairs with true scores
+    assert got.keys() <= truth.keys()
+    for k in got:
+        assert abs(got[k] - truth[k]) < 1e-6
+    if n_budget == 0 and n_tile == 0:
+        # lossless run ⇒ pair-for-pair, score-for-score equality
+        assert got.keys() == truth.keys()
+        # and agreement with the PR-1 dense global-top-k oracle
+        dense_buf = compact_pairs(scores, uq, uw, max_pairs=max_pairs)
+        if int(dense_buf.n_dropped) == 0:
+            assert got == pytest.approx(_buffer_pairs(dense_buf))
+    # the match mask is exact regardless of overflow
+    want_mask = (np.asarray(scores) > 0).any(axis=1)
+    np.testing.assert_array_equal(np.asarray(jc.row_mask), want_mask)
+    # buffer tail is inert
+    n = int(buf.n_pairs)
+    assert (np.asarray(buf.uid_a)[n:] == -1).all()
+    assert (np.asarray(buf.score)[n:] == 0.0).all()
+
+
+# Fixed sweep: every (overflow × shape-raggedness × impl) regime appears at
+# least once, so tier-1 retains full contract coverage without hypothesis.
+_SWEEP = [
+    # seed, q_tiles, w_tiles, ragged, theta, lam, tile_k, max_pairs, clustered
+    (0, 1, 1, False, 0.3, 0.2, 1024, 4096, True),    # lossless
+    (1, 2, 3, True, 0.6, 0.02, 1024, 4096, True),    # lossless, ragged
+    (2, 1, 2, False, 0.3, 0.2, 4, 4096, True),       # tile_k overflow
+    (3, 2, 2, True, 0.3, 0.2, 1024, 8, True),        # max_pairs overflow
+    (4, 1, 4, True, 0.3, 0.02, 4, 8, True),          # both levels overflow
+    (5, 3, 2, False, 0.9, 1.0, 16, 64, False),       # sparse / mostly dead
+    (6, 1, 1, True, 0.6, 0.2, 1, 1, True),           # capacity-1 boundary
+]
+
+
+@pytest.mark.parametrize(
+    "seed,q_tiles,w_tiles,ragged,theta,lam,tile_k,max_pairs,clustered", _SWEEP
+)
+def test_hierarchical_matches_dense_oracle_sweep(
+    seed, q_tiles, w_tiles, ragged, theta, lam, tile_k, max_pairs, clustered
+):
+    _check_hierarchical_vs_oracle(
+        seed, q_tiles, w_tiles, ragged, theta, lam, tile_k, max_pairs,
+        clustered,
+    )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        q_tiles=st.integers(1, 3),
+        w_tiles=st.integers(1, 4),
+        ragged=st.booleans(),
+        theta=st.sampled_from([0.3, 0.6, 0.9]),
+        lam=st.sampled_from([0.02, 0.2, 1.0]),
+        tile_k=st.sampled_from([1, 4, 16, 64, 1024]),
+        max_pairs=st.sampled_from([1, 8, 64, 4096]),
+        clustered=st.booleans(),
+    )
+    def test_hierarchical_matches_dense_oracle_property(
+        seed, q_tiles, w_tiles, ragged, theta, lam, tile_k, max_pairs,
+        clustered,
+    ):
+        _check_hierarchical_vs_oracle(
+            seed, q_tiles, w_tiles, ragged, theta, lam, tile_k, max_pairs,
+            clustered,
+        )
+
+
+@pytest.mark.parametrize("seed,tile_k,theta", [
+    (0, 3, 0.4), (1, 16, 0.8), (2, 1024, 0.4),
+])
+def test_kernel_candidates_match_jnp_mirrors(seed, tile_k, theta):
+    """The Pallas level-1 select (interpret mode) emits buffers identical
+    to both jnp mirrors: same indices, uids, counts; scores to kernel
+    accumulation tolerance."""
+    rng = np.random.default_rng(seed)
+    q, w, tq, tw, uq, uw = _stream(rng, 64, 96, 64, clustered=True)
+    kw = dict(theta=theta, lam=0.1, tile_k=tile_k, block_q=32, block_w=32,
+              chunk_d=32)
+    ref = sssj_join_candidates(q, w, tq, tw, uq, uw, impl="dense", **kw)
+    for impl in ("scan", "pallas"):
+        got = sssj_join_candidates(q, w, tq, tw, uq, uw, impl=impl, **kw)
+        for name in ("uid_a", "uid_b", "kept", "emitted"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got.cands, name)),
+                np.asarray(getattr(ref.cands, name)),
+                err_msg=f"{impl}/{name}",
+            )
+        np.testing.assert_allclose(
+            np.asarray(got.cands.score), np.asarray(ref.cands.score),
+            atol=1e-5, err_msg=f"{impl}/score",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.row_mask), np.asarray(ref.row_mask)
+        )
+
+
+def test_tile_candidates_order_is_stream_order(rng):
+    """Within a tile, survivors must be the *earliest* pairs in row-major
+    (stream) order — the overflow contract's "keep the first" clause."""
+    scores = np.zeros((4, 8), np.float32)
+    hits = [(0, 3), (0, 6), (1, 1), (2, 0), (2, 7), (3, 4)]
+    for i, (a, b) in enumerate(hits):
+        scores[a, b] = 0.5 + 0.01 * i
+    uq = jnp.arange(100, 104, dtype=jnp.int32)
+    uw = jnp.arange(8, dtype=jnp.int32)
+    cands, row_mask = tile_candidates(
+        jnp.asarray(scores), uq, uw, block_q=4, block_w=8, tile_k=4
+    )
+    assert int(cands.emitted[0]) == 6 and int(cands.kept[0]) == 4
+    kept = list(
+        zip(np.asarray(cands.uid_a)[0, :4], np.asarray(cands.uid_b)[0, :4])
+    )
+    assert kept == [(100 + a, b) for a, b in hits[:4]]
+    np.testing.assert_array_equal(
+        np.asarray(row_mask), np.array([True, True, True, True])
+    )
+    # merge keeps segment-then-rank order and attributes the tile loss
+    buf = merge_candidates(cands, max_pairs=3)
+    assert int(buf.n_pairs) == 3
+    assert int(buf.n_dropped) == 1 and int(buf.n_dropped_tile) == 2
+    got = list(zip(np.asarray(buf.uid_a)[:3], np.asarray(buf.uid_b)[:3]))
+    assert got == [(100 + a, b) for a, b in hits[:3]]
+
+
+@pytest.mark.parametrize("Q", [96, 90])   # aligned and ragged query counts
+def test_scan_impl_skips_expired_strips(Q, rng):
+    """The scan impl's strip-level time filter must fire for a window
+    entirely outside the τ-horizon — including when Q is not a block
+    multiple (regression: the bound once read zero-padded timestamps,
+    which pinned tq_lo to 0 and kept every strip alive)."""
+    d, W = 64, 384
+    q = rng.standard_normal((Q, d)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    w = rng.standard_normal((W, d)).astype(np.float32)
+    w /= np.linalg.norm(w, axis=1, keepdims=True)
+    tq = jnp.full((Q,), 1000.0)
+    tw = jnp.asarray(np.linspace(0, 10, W).astype(np.float32))
+    uq = jnp.arange(10_000, 10_000 + Q, dtype=jnp.int32)
+    uw = jnp.arange(W, dtype=jnp.int32)
+    jc = sssj_join_candidates(
+        jnp.asarray(q), jnp.asarray(w), tq, tw, uq, uw,
+        theta=0.5, lam=0.1, tile_k=64, block_q=32, block_w=32, chunk_d=32,
+        impl="scan",
+    )
+    assert int((np.asarray(jc.iters) > 0).sum()) == 0   # no strip executed
+    assert int(np.asarray(jc.cands.emitted).sum()) == 0
+    assert not np.asarray(jc.row_mask).any()
+
+
+def test_ref_path_matches_on_subblock_inputs(rng):
+    """Sub-block inputs auto-route to the dense jnp oracle and still obey
+    the full contract."""
+    q, w, tq, tw, uq, uw = _stream(np.random.default_rng(5), 9, 13, 16, True)
+    scores = sssj_join_ref(
+        q, w, tq[:, None], tw[:, None], uq[:, None], uw[:, None],
+        theta=0.4, lam=0.1,
+    )
+    jc = sssj_join_candidates(
+        q, w, tq, tw, uq, uw, theta=0.4, lam=0.1, tile_k=16,
+        block_q=32, block_w=32, chunk_d=32,
+    )
+    buf = merge_candidates(jc.cands, max_pairs=64)
+    assert _buffer_pairs(buf) == pytest.approx(_dense_truth(scores, uq, uw))
+    assert int(buf.n_dropped) == 0 and int(buf.n_dropped_tile) == 0

@@ -108,6 +108,7 @@ def test_compressed_psum_error_feedback():
     _run("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.sharding import shard_map  # jax 0.4/0.6 compat
         from repro.launch.mesh import make_mesh_for
         from repro.train.grad_sync import compressed_psum, init_ef_state
 
@@ -121,9 +122,9 @@ def test_compressed_psum_error_feedback():
             out, new_e = compressed_psum({"w": g[0]}, {"w": e[0]}, "pod")
             return out["w"][None], new_e["w"][None]
 
-        f = jax.jit(jax.shard_map(body, mesh=mesh,
-                                  in_specs=(P("pod"), P("pod")),
-                                  out_specs=(P("pod"), P("pod"))))
+        f = jax.jit(shard_map(body, mesh=mesh,
+                              in_specs=(P("pod"), P("pod")),
+                              out_specs=(P("pod"), P("pod"))))
         e = jnp.zeros_like(jnp.asarray(g_all))
         out, e = f(jnp.asarray(g_all), e)
         got = np.asarray(out)[0]

@@ -86,31 +86,84 @@ def test_compaction_matches_nonzero_extraction(rng):
     assert (np.asarray(buf.score)[n:] == 0.0).all()
 
 
+def test_engine_emission_paths_agree():
+    """The default hierarchical path (both its compiled-scan and Pallas
+    level-1 implementations) and the emit_dense oracle path must emit the
+    identical pair set, scores, and match masks end to end."""
+    d = 64
+    vecs, ts = dense_embedding_stream(192, d, seed=11, rate=2.0)
+
+    def run(**kw):
+        eng = StreamEngine(_cfg(d=d, **kw))
+        for i in range(0, 192, 80):
+            eng.push(vecs[i:i + 80], ts[i:i + 80])
+        ua, ub, sc, mask = eng.drain_arrays(return_masks=True)
+        assert eng.pairs_dropped == 0
+        return dict(zip(zip(ua.tolist(), ub.tolist()), sc.tolist())), mask
+
+    ref_pairs, ref_mask = run(emit_dense=True)
+    for kw in [dict(), dict(join_impl="pallas"), dict(use_ref=True)]:
+        pairs, mask = run(**kw)
+        assert pairs.keys() == ref_pairs.keys(), kw
+        np.testing.assert_allclose(
+            [pairs[k] for k in ref_pairs], list(ref_pairs.values()),
+            atol=1e-5,
+        )
+        np.testing.assert_array_equal(mask, ref_mask)
+
+
 # --------------------------------------------------------------------- #
 # overflow contracts
 # --------------------------------------------------------------------- #
-def test_max_pairs_overflow_flag():
-    """When a micro-batch emits more than max_pairs, the engine must keep
-    the first max_pairs pairs, report the rest as dropped, and keep the
-    window state exact (no corruption of later batches)."""
-    d = 32
-    rng = np.random.default_rng(1)
+def _dense_cluster(d=32, n=64, seed=1):
+    rng = np.random.default_rng(seed)
     base = rng.standard_normal(d).astype(np.float32)
-    vecs = base + 0.01 * rng.standard_normal((64, d)).astype(np.float32)
+    vecs = base + 0.01 * rng.standard_normal((n, d)).astype(np.float32)
     vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
-    ts = np.linspace(0.0, 0.01, 64)      # everything similar & recent
-    small = StreamEngine(_cfg(theta=0.9, lam=0.01, d=d, max_pairs=16))
-    big = StreamEngine(_cfg(theta=0.9, lam=0.01, d=d, max_pairs=4096))
+    ts = np.linspace(0.0, 0.01, n)       # everything similar & recent
+    return vecs, ts
+
+
+@pytest.mark.parametrize(
+    "small_kw,level",
+    [
+        (dict(max_pairs=16, tile_k=1024), "budget"),   # only max_pairs can drop
+        (dict(max_pairs=4096, tile_k=8), "tile"),      # only tile_k can drop
+    ],
+)
+def test_emission_overflow_flags(small_kw, level):
+    """When a micro-batch emits more than an emission capacity allows —
+    the global max_pairs budget or a level-1 tile_k candidate buffer —
+    the engine must keep a prefix, attribute every loss to its level, and
+    keep the window state exact (no corruption of later batches)."""
+    d = 32
+    vecs, ts = _dense_cluster(d=d)
+    # tile_k = block² (1024) makes level 1 lossless; max_pairs=4096 covers
+    # everything a 32-item micro-batch can emit against this window
+    small = StreamEngine(_cfg(theta=0.9, lam=0.01, d=d, **small_kw))
+    big = StreamEngine(_cfg(theta=0.9, lam=0.01, d=d, max_pairs=4096,
+                            tile_k=1024))
     for i in range(0, 64, 32):
         small.push(vecs[i:i + 32], ts[i:i + 32])
         big.push(vecs[i:i + 32], ts[i:i + 32])
-    ua_s, ub_s, _ = small.drain_arrays()
+    ua_s, ub_s, _, mask = small.drain_arrays(return_masks=True)
     ua_b, ub_b, _ = big.drain_arrays()
     assert big.pairs_dropped == 0
     assert small.pairs_dropped > 0
+    # drops are attributed to the right level, and nothing is double-counted
+    s = small.stats()
+    assert s["pairs_dropped"] == s["pairs_dropped_budget"] + s["pairs_dropped_tile"]
+    if level == "budget":
+        assert s["pairs_dropped_tile"] == 0 and s["pairs_dropped_budget"] > 0
+    else:
+        assert s["pairs_dropped_budget"] == 0 and s["pairs_dropped_tile"] > 0
     assert ua_s.size + small.pairs_dropped == ua_b.size
     # the survivors are a subset of the true pair set
     assert _pair_set(ua_s, ub_s) <= _pair_set(ua_b, ub_b)
+    # the per-row match mask is exact even under emission overflow
+    matched = np.zeros(64, bool)
+    matched[np.asarray(ua_b)] = True     # uid_a is the newer (query) side
+    np.testing.assert_array_equal(mask, matched)
 
 
 def test_ring_overflow_counter():
@@ -202,13 +255,35 @@ def test_sharded_engine_matches_oracle():
         eng = ShardedStreamEngine(cfg, mesh)
         for i in range(0, 256, 80):      # ragged pushes → padding path too
             eng.push(vecs[i:i+80], ts[i:i+80])
-        ua, ub, sc = eng.drain_arrays()
+        ua, ub, sc, mask = eng.drain_arrays(return_masks=True)
         got = set((min(a, b), max(a, b)) for a, b in zip(ua.tolist(), ub.tolist()))
         assert got == truth, (len(got), len(truth))
         assert (sc >= theta).all()
         assert eng.pairs_dropped == 0
         s = eng.stats()
         assert s["n_shards"] == 8 and s["n_items"] == 256
+        # the gathered match mask marks exactly the newer sides
+        want = np.zeros(256, bool); want[np.asarray(ua)] = True
+        np.testing.assert_array_equal(mask, want)
+
+        # max_pairs is a GLOBAL budget with exact per-level drop attribution:
+        # survivors + drops == truth even under a tight budget / shard cap
+        for kw in (dict(max_pairs=2), dict(max_pairs=512, shard_k=1),
+                   dict(max_pairs=512, tile_k=1)):
+            cfg2 = EngineConfig(theta=theta, lam=lam, capacity=64, d=d,
+                                micro_batch=32, block_q=32, block_w=32,
+                                chunk_d=32, **kw)
+            e2 = ShardedStreamEngine(cfg2, mesh)
+            for i in range(0, 256, 80):
+                e2.push(vecs[i:i+80], ts[i:i+80])
+            ua2, ub2, _, mask2 = e2.drain_arrays(return_masks=True)
+            s2 = e2.stats()
+            assert s2["pairs_emitted"] == ua2.size
+            assert ua2.size + s2["pairs_dropped"] == len(truth), (kw, ua2.size)
+            got2 = set((min(a, b), max(a, b))
+                       for a, b in zip(ua2.tolist(), ub2.tolist()))
+            assert got2 <= truth
+            np.testing.assert_array_equal(mask2, want)  # mask exact under drops
         print("sharded engine exact:", len(got))
     """)
     env = dict(os.environ)
