@@ -1,0 +1,51 @@
+"""End-to-end driver: one engine serving many logical streams.
+
+Eight tenants — each with its own similarity threshold and decay horizon —
+submit tiny per-request batches that no single tenant could fill a
+micro-batch with.  The multi-tenant runtime coalesces them onto one
+stream-tagged device engine (DESIGN.md §9): cross-tenant pairs are masked
+on device, per-tenant (θ, λ) rides a small device table, and the service
+groups near-duplicates under namespaced (tenant, uid) keys.
+
+    PYTHONPATH=src python examples/multi_tenant_service.py
+"""
+
+import numpy as np
+
+from repro.runtime import TenantTable
+from repro.serving import MultiTenantSSSJService
+
+rng = np.random.default_rng(0)
+K, DIM, ROUNDS, PER_SUBMIT = 8, 64, 12, 3
+
+# strict tenants (high θ, short horizon) next to permissive ones
+table = TenantTable(
+    thetas=[0.95, 0.9, 0.85, 0.9, 0.95, 0.8, 0.9, 0.85],
+    lams=[0.2, 0.05, 0.1, 0.02, 0.5, 0.05, 0.1, 0.2],
+)
+svc = MultiTenantSSSJService(table, dim=DIM, capacity=1024, micro_batch=32)
+
+# every tenant periodically re-posts a noisy copy of its own base document
+bases = rng.standard_normal((K, DIM)).astype(np.float32)
+t = 0.0
+for r in range(ROUNDS):
+    for k in range(K):
+        docs = rng.standard_normal((PER_SUBMIT, DIM)).astype(np.float32)
+        docs[0] = bases[k] + 0.01 * rng.standard_normal(DIM)
+        svc.submit(k, docs, t + np.arange(PER_SUBMIT) * 1e-3)
+        t += 0.01
+    svc.flush(final=False)          # coalesce: full micro-batches only
+svc.flush(final=True)
+
+stats = svc.stats()
+assert stats["n_items"] == K * ROUNDS * PER_SUBMIT
+assert stats["pairs_dropped"] == 0
+for k in range(K):
+    groups = svc.duplicate_groups(k)
+    # each tenant's planted repost chain groups under its OWN local uids;
+    # nothing leaked across streams
+    assert groups and max(len(g) for g in groups) >= ROUNDS // 2, (k, groups)
+print(f"✓ {K} tenants, {stats['n_items']} documents on one engine; "
+      f"padding waste {stats['padding_waste']:.1%}, "
+      f"{stats['spans_dispatched']} device dispatches, "
+      f"per-tenant groups e.g. tenant 0 → {svc.duplicate_groups(0)[:1]}")

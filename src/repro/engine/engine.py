@@ -90,6 +90,44 @@ class EngineConfig:
     use_ref: bool = False        # route joins through the jnp oracle
     interpret: Optional[bool] = None
 
+    def __post_init__(self) -> None:
+        """Reject configurations that would only fail later as opaque shape
+        or tracer errors deep inside the jitted scan."""
+        if not 0.0 < self.theta <= 1.0:
+            raise ValueError(f"theta must be in (0, 1], got {self.theta}")
+        if self.lam < 0.0:
+            raise ValueError(f"lam must be ≥ 0, got {self.lam}")
+        for name in ("capacity", "d", "micro_batch", "max_pairs", "tile_k",
+                     "block_q", "block_w", "chunk_d"):
+            v = getattr(self, name)
+            if (isinstance(v, bool) or not isinstance(v, (int, np.integer))
+                    or v < 1):
+                raise ValueError(f"{name} must be a positive int, got {v!r}")
+        if self.shard_k is not None and self.shard_k < 1:
+            raise ValueError(f"shard_k must be ≥ 1, got {self.shard_k}")
+        if self.micro_batch > self.capacity:
+            raise ValueError(
+                f"micro_batch ({self.micro_batch}) exceeds window capacity "
+                f"({self.capacity}): a single micro-batch would overwrite "
+                f"its own arrivals; raise capacity or lower micro_batch"
+            )
+        # the join pads rows/features up to block multiples, so any
+        # block_q/block_w/chunk_d is shape-safe — but a padded query tile
+        # must still exist: blocks have to fit the padded micro-batch,
+        # i.e. be at most the next block_q-multiple of micro_batch (always
+        # true) and positive (checked above).  What CAN break downstream
+        # is an impl contradiction:
+        if self.use_ref and self.join_impl in ("pallas", "scan"):
+            raise ValueError(
+                f"use_ref routes joins through the dense jnp oracle and "
+                f"contradicts join_impl={self.join_impl!r}; drop one"
+            )
+        if self.join_impl not in (None, "pallas", "scan", "dense"):
+            raise ValueError(
+                f"join_impl must be one of None/'pallas'/'scan'/'dense', "
+                f"got {self.join_impl!r}"
+            )
+
     @property
     def tau(self) -> float:
         return time_horizon(self.theta, self.lam)
@@ -178,24 +216,49 @@ def make_micro_step(
     cfg: EngineConfig,
     ingest: Callable,
     self_mask: Optional[Callable] = None,
+    tenant_lookup: Optional[Callable] = None,
+    embed_fn: Optional[Callable] = None,
 ):
-    """Build the scan body shared by the single-device and sharded engines.
+    """Build the scan body shared by the single-device, sharded, and
+    multi-tenant engines.
 
-    ``ingest(state, q, tq, uq, n_valid, t_max) → new state`` pushes this
-    micro-batch (or the shard's slice of it) into the ring with overflow
-    accounting; ``self_mask`` optionally suppresses the within-batch
-    candidates (``PairCandidates → PairCandidates``; the sharded engine
-    emits them on one shard only).  The step emits ``(PairBuffer,
-    row_mask (mb,) bool)`` per micro-batch.
+    ``ingest(state, q, tq, uq, n_valid, t_max[, sq]) → new state`` pushes
+    this micro-batch (or the shard's slice of it) into the ring with
+    overflow accounting; ``self_mask`` optionally suppresses the
+    within-batch candidates (``PairCandidates → PairCandidates``; the
+    sharded engine emits them on one shard only).  The step emits
+    ``(PairBuffer, row_mask (mb,) bool)`` per micro-batch.
+
+    Multi-tenant mode (DESIGN.md §9): when ``tenant_lookup`` is given, the
+    scan inputs gain a ``sq (mb,)`` stream-id lane (xs becomes a 5-tuple),
+    the window's ``sids`` lane is threaded into both joins as the
+    stream-equality mask, and ``tenant_lookup(sq) → (theta_q, lam_q) |
+    None`` supplies the per-row thresholds from the tenant table (return
+    ``None`` for uniform tenants).  ``embed_fn`` optionally maps the raw
+    per-micro-batch payload (e.g. token ids) to unit vectors *inside* the
+    same program — the fused embed→join path.
     """
     kw = cfg.join_kwargs
     ckw = cfg.candidate_kwargs
+    multi = tenant_lookup is not None
     if cfg.emit_dense and self_mask is not None:
         raise ValueError("emit_dense oracle path is single-device only")
+    if cfg.emit_dense and (multi or embed_fn is not None):
+        raise ValueError(
+            "the emit_dense oracle path is single-tenant and takes vectors; "
+            "multi-tenant / fused-embed runs use the hierarchical path"
+        )
 
     def micro_step(carry, xs):
         state, telem = carry
-        q, tq, uq, n_valid = xs
+        if multi:
+            q, tq, uq, sq, n_valid = xs
+            sq = sq.astype(jnp.int32)
+        else:
+            q, tq, uq, n_valid = xs
+            sq = None
+        if embed_fn is not None:
+            q = embed_fn(q)
         tq = tq.astype(jnp.float32)
         uq = uq.astype(jnp.int32)
         # join vs the window and within the micro-batch; padded rows carry
@@ -213,10 +276,18 @@ def make_micro_step(
         else:
             # hierarchical: per-tile level-1 candidates → segmented merge;
             # no dense score matrix exists anywhere on this path
+            if multi:
+                per_row = tenant_lookup(sq)
+                theta_q, lam_q = per_row if per_row is not None else (None, None)
+                win_kw = dict(sq=sq, sw=state.sids,
+                              theta_q=theta_q, lam_q=lam_q)
+                self_kw = dict(sq=sq, sw=sq, theta_q=theta_q, lam_q=lam_q)
+            else:
+                win_kw = self_kw = {}
             jw = sssj_join_candidates(
-                q, state.vecs, tq, state.ts, uq, state.uids, **ckw
+                q, state.vecs, tq, state.ts, uq, state.uids, **ckw, **win_kw
             )
-            js = sssj_join_candidates(q, q, tq, tq, uq, uq, **ckw)
+            js = sssj_join_candidates(q, q, tq, tq, uq, uq, **ckw, **self_kw)
             cs = js.cands if self_mask is None else self_mask(js.cands)
             buf = merge_candidates(
                 concat_candidates(jw.cands, cs), max_pairs=cfg.max_pairs
@@ -227,7 +298,10 @@ def make_micro_step(
         # newest valid arrival — the reference point for live-slot overflow
         lanes = jnp.arange(q.shape[0], dtype=jnp.int32)
         t_max = jnp.max(jnp.where(lanes < n_valid, tq, -jnp.inf))
-        new_state = ingest(state, q, tq, uq, n_valid, t_max)
+        if multi:
+            new_state = ingest(state, q, tq, uq, n_valid, t_max, sq)
+        else:
+            new_state = ingest(state, q, tq, uq, n_valid, t_max)
         new_telem = EngineTelemetry(
             chunks=telem.chunks + it_win.sum(),
             tiles=telem.tiles + it_win.size,
@@ -282,10 +356,7 @@ class StreamEngineBase:
     """
 
     def __init__(self, cfg: EngineConfig) -> None:
-        if cfg.max_pairs < 1:
-            raise ValueError("max_pairs must be ≥ 1")
-        if cfg.tile_k < 1:
-            raise ValueError("tile_k must be ≥ 1")
+        # cfg invariants are enforced by EngineConfig.__post_init__
         self.cfg = cfg
         self._next_uid = 0
         # futures of host-materialized (bufs, masks, nvs, nbytes) records

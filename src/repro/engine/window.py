@@ -16,7 +16,7 @@ re-export them for compatibility.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,13 +33,22 @@ _EMPTY_T = jnp.float32(3.0e30)
 
 
 class WindowState(NamedTuple):
-    """Sharded ring buffer of recent stream items (a pytree)."""
+    """Sharded ring buffer of recent stream items (a pytree).
+
+    ``sids`` is the stream-id lane of the multi-tenant runtime
+    (DESIGN.md §9): each slot remembers which logical stream its item
+    belongs to, so the join can mask cross-stream pairs on device.  It is
+    last and defaults to ``None`` so legacy constructions (and pytrees
+    that never multiplex streams, e.g. ``core/distributed.py``) stay
+    valid — ``None`` is simply an absent pytree leaf.
+    """
 
     vecs: jax.Array    # (capacity, d) f32
     ts: jax.Array      # (capacity,) f32; empty slots hold +3e30
     uids: jax.Array    # (capacity,) i32; empty slots hold -1
     cursor: jax.Array  # () i32 — next write slot
     overflow: jax.Array  # () i32 — live items overwritten (window undersized)
+    sids: Optional[jax.Array] = None  # (capacity,) i32 stream ids; -1 = empty
 
 
 def init_window(capacity: int, d: int, dtype=jnp.float32) -> WindowState:
@@ -49,11 +58,20 @@ def init_window(capacity: int, d: int, dtype=jnp.float32) -> WindowState:
         uids=jnp.full((capacity,), -1, jnp.int32),
         cursor=jnp.zeros((), jnp.int32),
         overflow=jnp.zeros((), jnp.int32),
+        sids=jnp.full((capacity,), -1, jnp.int32),
     )
 
 
+def _sid_rows(sq: Optional[jax.Array], b: int) -> jax.Array:
+    return jnp.zeros((b,), jnp.int32) if sq is None else sq.astype(jnp.int32)
+
+
 def push_batch(
-    state: WindowState, q: jax.Array, tq: jax.Array, uq: jax.Array
+    state: WindowState,
+    q: jax.Array,
+    tq: jax.Array,
+    uq: jax.Array,
+    sq: Optional[jax.Array] = None,
 ) -> WindowState:
     cap = state.ts.shape[0]
     b = q.shape[0]
@@ -63,6 +81,8 @@ def push_batch(
         ts=state.ts.at[pos].set(tq.astype(jnp.float32)),
         uids=state.uids.at[pos].set(uq.astype(jnp.int32)),
         cursor=(state.cursor + b) % cap,
+        sids=None if state.sids is None
+        else state.sids.at[pos].set(_sid_rows(sq, b)),
     )
 
 
@@ -72,6 +92,7 @@ def push_batch_masked(
     tq: jax.Array,
     uq: jax.Array,
     n_valid: jax.Array,
+    sq: Optional[jax.Array] = None,
 ) -> WindowState:
     """Push only the first ``n_valid`` rows (the rest are scan padding).
 
@@ -91,6 +112,8 @@ def push_batch_masked(
         ts=state.ts.at[dest].set(tq.astype(jnp.float32), mode="drop"),
         uids=state.uids.at[dest].set(uq.astype(jnp.int32), mode="drop"),
         cursor=(state.cursor + n_valid.astype(jnp.int32)) % cap,
+        sids=None if state.sids is None
+        else state.sids.at[dest].set(_sid_rows(sq, b), mode="drop"),
     )
 
 
@@ -102,6 +125,7 @@ def push_with_overflow(
     n_valid: jax.Array,
     t_max: jax.Array,
     tau: float,
+    sq: Optional[jax.Array] = None,
 ) -> WindowState:
     """Masked push that also counts live-slot overwrites.
 
@@ -115,7 +139,7 @@ def push_with_overflow(
     valid = lanes < n_valid
     pos = (state.cursor + lanes) % cap
     live = valid & (state.uids[pos] >= 0) & (t_max - state.ts[pos] <= tau)
-    new_state = push_batch_masked(state, q, tq, uq, n_valid)
+    new_state = push_batch_masked(state, q, tq, uq, n_valid, sq=sq)
     return new_state._replace(
         overflow=state.overflow + jnp.sum(live.astype(jnp.int32))
     )

@@ -63,26 +63,45 @@ def _tile_scores(
     q_ref, w_ref, tq_ref, tw_ref, uq_ref, uw_ref, sqq_ref, sqw_ref,
     *, theta: float, lam: float, chunk_d: int, n_chunks: int,
     bq: int, bw: int,
+    sid_q_ref=None, sid_w_ref=None, th_ref=None, lm_ref=None,
 ):
     """Shared per-tile score computation: thresholded decayed similarities
     for one (BQ, BW) tile, with tile-level time filtering and the chunked
-    ℓ2 early exit.  Returns ``(emitted (BQ, BW) f32, k_final () i32)``."""
+    ℓ2 early exit.  Returns ``(emitted (BQ, BW) f32, k_final () i32)``.
+
+    The optional multi-tenant refs (DESIGN.md §9) fold a stream-equality
+    mask into the order mask (``sid_q == sid_w``; cross-stream pairs never
+    score) and replace the static (θ, λ) with per-query-row values looked
+    up from the tenant table — the query row's stream is the pair's stream,
+    so query-side values govern the pair.  Both prunes survive: the decay
+    matrix uses the row's λ, and every "≥ θ" check becomes row-wise
+    (``any(x ≥ θ_row)``), which for a scalar θ is the same predicate the
+    single-tenant kernel used.
+    """
     f32 = jnp.float32
     tq = tq_ref[:, 0].astype(f32)              # (BQ,)
     tw = tw_ref[:, 0].astype(f32)              # (BW,)
     uq = uq_ref[:, 0]                          # (BQ,) int32
     uw = uw_ref[:, 0]                          # (BW,) int32
+    if th_ref is None:
+        th = theta                             # scalar broadcast
+        lam_col = lam
+    else:
+        th = th_ref[:, 0].astype(f32)[:, None]   # (BQ, 1)
+        lam_col = lm_ref[:, 0].astype(f32)[:, None]
 
     dt = jnp.abs(tq[:, None] - tw[None, :])
-    decay = jnp.exp(-lam * dt)                 # (BQ, BW)
+    decay = jnp.exp(-lam_col * dt)             # (BQ, BW)
     # uid-order mask: join each pair once (query strictly newer), and drop
     # empty ring slots / padding (uid < 0).  Folded into the decay matrix so
     # the tile-level time filter below covers all masking at once.
     order = (uw[None, :] >= 0) & (uq[:, None] > uw[None, :])
+    if sid_q_ref is not None:
+        order &= sid_q_ref[:, 0][:, None] == sid_w_ref[:, 0][None, :]
     decay = jnp.where(order, decay, 0.0)
 
     # --- time filtering at tile granularity (paper §3 / §6.2) ---
-    tile_alive = jnp.max(decay) >= theta       # dot ≤ 1 ⇒ decayed ≤ decay
+    tile_alive = jnp.any(decay >= th)          # dot ≤ 1 ⇒ decayed ≤ decay
 
     def cond(state):
         k, _, live = state
@@ -101,14 +120,14 @@ def _tile_scores(
         sq = jax.lax.dynamic_slice_in_dim(sqq_ref[...], k, 1, 1)[:, 0]   # (BQ,)
         sw = jax.lax.dynamic_slice_in_dim(sqw_ref[...], k, 1, 1)[:, 0]   # (BW,)
         ub = (acc + sq[:, None] * sw[None, :]) * decay
-        live = jnp.max(ub) >= theta
+        live = jnp.any(ub >= th)
         return k + 1, acc, live
 
     acc0 = jnp.zeros((bq, bw), dtype=f32)
     k_final, acc, _ = jax.lax.while_loop(cond, body, (0, acc0, tile_alive))
 
     scores = acc * decay
-    emitted = jnp.where(scores >= theta, scores, 0.0)
+    emitted = jnp.where(scores >= th, scores, 0.0)
     return emitted, k_final
 
 
@@ -131,8 +150,9 @@ def _kernel(
 
 def _cand_kernel(
     q_ref, w_ref, tq_ref, tw_ref, uq_ref, uw_ref, sqq_ref, sqw_ref,
-    idx_ref, score_ref, emitted_ref, rowhits_ref, iters_ref,
-    *, theta: float, lam: float, chunk_d: int, n_chunks: int, tile_k: int,
+    *refs,
+    theta: float, lam: float, chunk_d: int, n_chunks: int, tile_k: int,
+    multi: bool = False,
 ):
     """Level-1 hierarchical compaction: select this tile's ≥ θ entries.
 
@@ -142,7 +162,17 @@ def _cand_kernel(
     exclusive-scan scatter, expressed as a gather because TPU (and XLA CPU)
     handle a ``tile_k``-sized gather far better than a ``BQ·BW``-sized
     scatter.  Dead tiles skip the search entirely.
+
+    With ``multi=True`` four extra input refs precede the outputs —
+    per-row stream ids (query/window) and per-query-row (θ, λ) — and the
+    stream-equality mask joins the masking stack (see ``_tile_scores``).
     """
+    if multi:
+        sid_q_ref, sid_w_ref, th_ref, lm_ref = refs[:4]
+        refs = refs[4:]
+    else:
+        sid_q_ref = sid_w_ref = th_ref = lm_ref = None
+    idx_ref, score_ref, emitted_ref, rowhits_ref, iters_ref = refs
     bq = q_ref.shape[0]
     bw = w_ref.shape[0]
     n = bq * bw
@@ -150,6 +180,8 @@ def _cand_kernel(
         q_ref, w_ref, tq_ref, tw_ref, uq_ref, uw_ref, sqq_ref, sqw_ref,
         theta=theta, lam=lam, chunk_d=chunk_d, n_chunks=n_chunks,
         bq=bq, bw=bw,
+        sid_q_ref=sid_q_ref, sid_w_ref=sid_w_ref, th_ref=th_ref,
+        lm_ref=lm_ref,
     )
     iters_ref[0, 0] = k_final
 
@@ -272,23 +304,47 @@ def sssj_join_candidates_kernel_call(
     chunk_d: int,
     tile_k: int,
     interpret: bool,
+    sq: jax.Array = None,       # (Q, 1) i32 stream ids (multi-tenant)
+    sw: jax.Array = None,       # (W, 1) i32
+    theta_q: jax.Array = None,  # (Q, 1) f32 per-row θ
+    lam_q: jax.Array = None,    # (Q, 1) f32 per-row λ
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Hierarchical (level-1) pallas_call; no dense ``(Q, W)`` output exists.
 
     Returns ``(cand_idx (nQ, nW, tile_k) i32 in-tile row-major flat index or
     -1, cand_score (nQ, nW, tile_k) f32, emitted (nQ, nW) i32 true per-tile
     ≥ θ counts, row_hits (nQ, nW, block_q) i32 0/1, iters (nQ, nW) i32)``.
+
+    The multi-tenant lanes (all four or none) ride as extra ``(·, 1)``
+    inputs with the same block specs as the timestamp lanes.
     """
     Q, d = q.shape
     W, _ = w.shape
     n_chunks = d // chunk_d
     nq, nw = Q // block_q, W // block_w
     grid = (nq, nw)
+    multi = sq is not None
+    if multi and theta_q is None:
+        # stream lanes without per-row (θ, λ) — uniform tenants: the kernel
+        # takes the four lanes together, so broadcast the static scalars
+        # (numerically identical to the scalar path)
+        theta_q = jnp.full((Q, 1), theta, jnp.float32)
+        lam_q = jnp.full((Q, 1), lam, jnp.float32)
 
     kernel = functools.partial(
         _cand_kernel, theta=theta, lam=lam, chunk_d=chunk_d,
-        n_chunks=n_chunks, tile_k=tile_k,
+        n_chunks=n_chunks, tile_k=tile_k, multi=multi,
     )
+    in_specs = _join_in_specs(block_q, block_w, d, n_chunks)
+    inputs = [q, w, tq, tw, uq, uw, sqq, sqw]
+    if multi:
+        in_specs += [
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),  # sq
+            pl.BlockSpec((block_w, 1), lambda i, j: (j, 0)),  # sw
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),  # theta_q
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),  # lam_q
+        ]
+        inputs += [sq, sw, theta_q, lam_q]
     out_shape = [
         jax.ShapeDtypeStruct((nq, nw, tile_k), jnp.int32),
         jax.ShapeDtypeStruct((nq, nw, tile_k), jnp.float32),
@@ -306,8 +362,8 @@ def sssj_join_candidates_kernel_call(
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=_join_in_specs(block_q, block_w, d, n_chunks),
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(q, w, tq, tw, uq, uw, sqq, sqw)
+    )(*inputs)

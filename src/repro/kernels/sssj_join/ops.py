@@ -243,6 +243,10 @@ def sssj_join_candidates(
     chunk_d: int = 128,
     impl: Optional[str] = None,
     interpret: Optional[bool] = None,
+    sq: Optional[jax.Array] = None,
+    sw: Optional[jax.Array] = None,
+    theta_q: Optional[jax.Array] = None,
+    lam_q: Optional[jax.Array] = None,
 ) -> JoinCandidates:
     """Blocked join with hierarchical (level-1) emission — no dense matrix.
 
@@ -254,15 +258,43 @@ def sssj_join_candidates(
     compiled tile-scan elsewhere.  Sub-block inputs always take the dense
     jnp oracle — same candidate buffers, and the dense matrix they briefly
     materialize is smaller than one kernel tile.
+
+    Multi-tenant lanes (DESIGN.md §9, honored identically by all three
+    implementations):
+
+      * ``sq (Q,)`` / ``sw (W,)`` — stream ids; a stream-equality mask is
+        folded into the uid-order mask, so cross-stream pairs never emit;
+      * ``theta_q (Q,)`` / ``lam_q (Q,)`` — optional per-query-row (θ, λ)
+        looked up from the tenant table (pass both or neither).  The
+        stream-equality mask makes the query row's stream the pair's
+        stream, so query-side values govern the pair; the static
+        ``theta``/``lam`` then only seed pruning defaults.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "scan"
+    if (theta_q is None) != (lam_q is None):
+        raise ValueError("theta_q and lam_q must be passed together")
+    if (sq is None) != (sw is None):
+        raise ValueError("sq and sw must be passed together")
+    if theta_q is not None and sq is None:
+        raise ValueError("per-row (theta_q, lam_q) requires stream lanes")
     tq = tq.reshape(-1).astype(jnp.float32)
     tw = tw.reshape(-1).astype(jnp.float32)
     uq = uq.reshape(-1).astype(jnp.int32)
     uw = uw.reshape(-1).astype(jnp.int32)
+    if sq is not None:
+        sq = sq.reshape(-1).astype(jnp.int32)
+        sw = sw.reshape(-1).astype(jnp.int32)
+    if theta_q is not None:
+        theta_q = theta_q.reshape(-1).astype(jnp.float32)
+        lam_q = lam_q.reshape(-1).astype(jnp.float32)
+    # pruning scalars must come from the UNPADDED per-row tables: row
+    # padding below uses inert fills (θ=2 can never emit, λ=0 never decays)
+    # which would otherwise loosen the min-based strip/tile bounds
+    th_min = theta if theta_q is None else jnp.min(theta_q)
+    lam_min = lam if lam_q is None else jnp.min(lam_q)
 
     Q, d = q.shape
     W, _ = w.shape
@@ -276,6 +308,10 @@ def sssj_join_candidates(
         scores = sssj_join_ref(
             q, w, tq[:, None], tw[:, None], uq[:, None], uw[:, None],
             theta=theta, lam=lam,
+            sq=None if sq is None else sq[:, None],
+            sw=None if sw is None else sw[:, None],
+            theta_q=None if theta_q is None else theta_q[:, None],
+            lam_q=None if lam_q is None else lam_q[:, None],
         )
         cands, row_mask = tile_candidates(
             scores, uq, uw, block_q=block_q, block_w=block_w, tile_k=tile_k
@@ -299,6 +335,12 @@ def sssj_join_candidates(
     twp = _pad_rows(tw, block_w)
     uqp = _pad_rows(uq, block_q, fill=NEG_UID)
     uwp = _pad_rows(uw, block_w, fill=NEG_UID)
+    # inert fills: padded rows carry uid = -1 so they can never emit; the
+    # θ/λ fills are chosen so they can't loosen any bound either
+    sqp = None if sq is None else _pad_rows(sq, block_q, fill=NEG_UID)
+    swp = None if sw is None else _pad_rows(sw, block_w, fill=NEG_UID)
+    thp = None if theta_q is None else _pad_rows(theta_q, block_q, fill=2.0)
+    lmp = None if lam_q is None else _pad_rows(lam_q, block_q, fill=0.0)
     Qp, Wp = qp.shape[0], wp.shape[0]
     nq, nw = Qp // block_q, Wp // block_w
 
@@ -311,6 +353,10 @@ def sssj_join_candidates(
                 uqp[:, None], uwp[:, None], sqq, sqw,
                 theta=theta, lam=lam, block_q=block_q, block_w=block_w,
                 chunk_d=chunk_d, tile_k=tile_k, interpret=interpret,
+                sq=None if sqp is None else sqp[:, None],
+                sw=None if swp is None else swp[:, None],
+                theta_q=None if thp is None else thp[:, None],
+                lam_q=None if lmp is None else lmp[:, None],
             )
         )
         cands = _kernel_candidates(
@@ -326,6 +372,7 @@ def sssj_join_candidates(
     w_tiles = wp.reshape(nw, block_w, d)
     tw_tiles = twp.reshape(nw, block_w)
     uw_tiles = uwp.reshape(nw, block_w)
+    sw_tiles = None if swp is None else swp.reshape(nw, block_w)
     qf = qp.astype(jnp.float32)
     tq2 = tqp.astype(jnp.float32)
     # strip-filter extremes come from the UNPADDED timestamps: _pad_rows
@@ -335,59 +382,81 @@ def sssj_join_candidates(
     tq_lo, tq_hi = jnp.min(tq), jnp.max(tq)
     n_chunks = d // chunk_d
 
-    def live(args):
-        wt, twt, uwt = args
+    def strip(s):
+        """Score one window column strip and select its tile candidates."""
+        wt = jax.lax.dynamic_index_in_dim(w_tiles, s, 0, keepdims=False)
+        twt = jax.lax.dynamic_index_in_dim(tw_tiles, s, 0, keepdims=False)
+        uwt = jax.lax.dynamic_index_in_dim(uw_tiles, s, 0, keepdims=False)
         sims = qf @ wt.astype(jnp.float32).T                       # (Qp, BW)
-        dec = sims * jnp.exp(-lam * jnp.abs(tq2[:, None] - twt[None, :]))
+        lam_col = lam if lmp is None else lmp[:, None]
+        dec = sims * jnp.exp(-lam_col * jnp.abs(tq2[:, None] - twt[None, :]))
         order = (uwt[None, :] >= 0) & (uqp[:, None] > uwt[None, :])
-        dec = jnp.where(order & (dec >= theta), dec, 0.0)
-        cands_t, rm = tile_candidates(
+        if sw_tiles is not None:
+            swt = jax.lax.dynamic_index_in_dim(sw_tiles, s, 0, keepdims=False)
+            order &= sqp[:, None] == swt[None, :]
+        thr = theta if thp is None else thp[:, None]
+        dec = jnp.where(order & (dec >= thr), dec, 0.0)
+        return tile_candidates(
             dec, uqp, uwt, block_q=block_q, block_w=block_w, tile_k=tile_k
         )
-        return cands_t, rm
 
-    def dead(args):
-        _, _, uwt = args
-        z = jnp.zeros((nq,), jnp.int32)
-        cands_t = PairCandidates(
-            uid_a=jnp.full((nq, tile_k), -1, jnp.int32),
-            uid_b=jnp.full((nq, tile_k), -1, jnp.int32),
-            score=jnp.zeros((nq, tile_k), jnp.float32),
-            kept=z, emitted=z,
+    # Strip-level time filter (paper §3, the kernel's first prune, at
+    # column-strip granularity): a lower bound on min |Δt| from the strips'
+    # time extremes.  Empty ring slots carry t = +3e30, so a fully-empty
+    # strip is dead by construction; unit vectors ⇒ dot ≤ 1 ⇒
+    # score ≤ exp(-λ·Δt).  With per-row (θ, λ) the scalar bound uses
+    # (min θ, min λ), which upper-bounds every row's score requirement.
+    tw_min = jnp.min(tw_tiles, axis=1)                             # (nw,)
+    tw_max = jnp.max(tw_tiles, axis=1)
+    uw_max = jnp.max(uw_tiles, axis=1)
+    dt_lb = jnp.maximum(0.0, jnp.maximum(tq_lo - tw_max, tw_min - tq_hi))
+    alive = (jnp.exp(-lam_min * dt_lb) >= th_min) & (uw_max >= 0)
+    # Cursor-anchored live range (ROADMAP strip-skipping item): ring writes
+    # are sequential and uids monotone, so the newest strip is the one
+    # holding the max uid and live strips cluster within the τ-horizon just
+    # behind it.  Walking ``dist`` strips back from the newest covers every
+    # flagged-alive strip (``n_live`` is defined as exactly that cover), so
+    # the sweep costs O(live strips), not O(n_strips) — an all-dead batch
+    # runs zero strip iterations instead of n_strips `lax.cond` dispatches.
+    # Correctness never depends on the time-ordering: a strip outside the
+    # walk has ``alive = False``, i.e. it is provably below θ for every row.
+    newest = jnp.argmax(uw_max).astype(jnp.int32)
+    dist = (newest - jnp.arange(nw, dtype=jnp.int32)) % nw
+    n_live = jnp.max(jnp.where(alive, dist + 1, 0))
+
+    def body(i, acc):
+        cands_acc, mask_acc = acc
+        s = (newest - i) % nw
+        cands_t, rm = strip(s)
+        cands_acc = jax.tree.map(
+            lambda a, x: jax.lax.dynamic_update_index_in_dim(a, x, s, 0),
+            cands_acc, cands_t,
         )
-        return cands_t, jnp.zeros((Qp,), bool)
+        return cands_acc, mask_acc | rm
 
-    def step(_, xs):
-        wt, twt, uwt = xs
-        # tile-level time filter (paper §3, the kernel's first prune, here
-        # column-strip granularity): a lower bound on min |Δt| from the
-        # strips' time extremes.  Empty ring slots carry t = +3e30, so a
-        # fully-empty strip is dead by construction; unit vectors ⇒
-        # dot ≤ 1 ⇒ score ≤ exp(-λ·Δt).  Dead strips cost O(Q + block_w):
-        # per-arrival work tracks the τ-horizon, not the window capacity.
-        dt_lb = jnp.maximum(
-            0.0, jnp.maximum(tq_lo - jnp.max(twt), jnp.min(twt) - tq_hi)
-        )
-        alive = (jnp.exp(-lam * dt_lb) >= theta) & (jnp.max(uwt) >= 0)
-        cands_t, rm = jax.lax.cond(alive, live, dead, (wt, twt, uwt))
-        return None, (cands_t, rm, alive)
-
-    _, (col_cands, col_masks, col_alive) = jax.lax.scan(
-        step, None, (w_tiles, tw_tiles, uw_tiles)
+    zeros_seg = jnp.zeros((nw, nq), jnp.int32)
+    cands0 = PairCandidates(
+        uid_a=jnp.full((nw, nq, tile_k), -1, jnp.int32),
+        uid_b=jnp.full((nw, nq, tile_k), -1, jnp.int32),
+        score=jnp.zeros((nw, nq, tile_k), jnp.float32),
+        kept=zeros_seg, emitted=zeros_seg,
     )
-    # stacked leaves are (nw, nq, ...): reorder segments to (nq, nw) tile-
-    # row-major so all impls emit identical buffers
+    col_cands, any_mask = jax.lax.fori_loop(
+        0, n_live, body, (cands0, jnp.zeros((Qp,), bool))
+    )
+    # accumulated leaves are (nw, nq, ...): reorder segments to (nq, nw)
+    # tile-row-major so all impls emit identical buffers
     def reorder(x):
         return jnp.swapaxes(
             x.reshape((nw, nq) + x.shape[2:]), 0, 1
         ).reshape((nq * nw,) + x.shape[2:])
 
     cands = jax.tree.map(reorder, col_cands)
-    row_mask = jnp.any(col_masks, axis=0)[:Q]
+    row_mask = any_mask[:Q]
     # pruning telemetry at the same granularity as the kernel's: dead
     # strips execute zero d-chunks (the strip bound is coarser than the
     # kernel's per-pair decay max, so this may overcount live tiles)
     iters = jnp.broadcast_to(
-        jnp.where(col_alive, n_chunks, 0)[None, :], (nq, nw)
+        jnp.where(alive, n_chunks, 0)[None, :], (nq, nw)
     ).astype(jnp.int32)
     return JoinCandidates(cands=cands, row_mask=row_mask, iters=iters)

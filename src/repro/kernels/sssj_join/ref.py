@@ -2,24 +2,46 @@
 
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 __all__ = ["sssj_join_ref"]
 
 
-def sssj_join_ref(q, w, tq, tw, uq, uw, *, theta: float, lam: float):
+def sssj_join_ref(
+    q, w, tq, tw, uq, uw, *, theta: float, lam: float,
+    sq: Optional[jax.Array] = None,
+    sw: Optional[jax.Array] = None,
+    theta_q: Optional[jax.Array] = None,
+    lam_q: Optional[jax.Array] = None,
+):
     """Dense reference: thresholded decayed scores with uid-order masking.
 
     Args mirror the kernel: ``q (Q, d)``, ``w (W, d)``, timestamps ``(·, 1)``
     float, uids ``(·, 1)`` int (negative = empty slot).  Returns the
     ``(Q, W)`` float32 score matrix: ``dot·exp(-λΔt)`` where that value is
     ≥ θ and ``uid_q > uid_w ≥ 0``, else 0.
+
+    Multi-tenant lanes (DESIGN.md §9, all optional):
+
+      * ``sq (Q, 1)`` / ``sw (W, 1)`` — stream ids; a stream-equality mask
+        is folded into the order mask so cross-stream pairs never emit;
+      * ``theta_q (Q, 1)`` / ``lam_q (Q, 1)`` — per-row (θ, λ) looked up
+        from the tenant table.  A pair's stream is its query row's stream
+        (the equality mask guarantees it), so query-side values govern the
+        whole pair.
     """
     qf = q.astype(jnp.float32)
     wf = w.astype(jnp.float32)
     sims = qf @ wf.T
     dt = jnp.abs(tq.astype(jnp.float32) - tw.astype(jnp.float32).T)
-    dec = sims * jnp.exp(-lam * dt)
+    lam_eff = lam if lam_q is None else lam_q.astype(jnp.float32)
+    dec = sims * jnp.exp(-lam_eff * dt)
     order = (uw.T >= 0) & (uq > uw.T)
+    if sq is not None:
+        order &= sq.astype(jnp.int32) == sw.astype(jnp.int32).T
     dec = jnp.where(order, dec, 0.0)
-    return jnp.where(dec >= theta, dec, 0.0).astype(jnp.float32)
+    thr = theta if theta_q is None else theta_q.astype(jnp.float32)
+    return jnp.where(dec >= thr, dec, 0.0).astype(jnp.float32)

@@ -1,0 +1,24 @@
+"""repro.runtime — multi-tenant streaming runtime (DESIGN.md §9).
+
+Multiplexes K independent logical streams onto one device-resident
+engine:
+
+  * :mod:`~repro.runtime.tenants` — per-stream ``(θ, λ)`` device table;
+  * :mod:`~repro.runtime.router` — admission queue / request coalescer
+    with per-tenant backpressure and padding/queue-delay telemetry;
+  * :mod:`~repro.runtime.runtime` — :class:`MultiTenantRuntime`: the
+    stream-tagged engine facade (fixed-span dispatch, per-tenant drain)
+    and the optional fused embed→join path (:class:`FusedEmbedder`).
+"""
+
+from .router import (  # noqa: F401
+    RequestRouter,
+    RouterTelemetry,
+    TenantBackpressure,
+)
+from .runtime import (  # noqa: F401
+    FusedEmbedder,
+    MultiTenantRuntime,
+    make_tenant_batch_step,
+)
+from .tenants import TenantTable  # noqa: F401

@@ -1,0 +1,413 @@
+"""Multi-tenant streaming runtime: K logical streams on one device engine.
+
+The engine (DESIGN.md §4) assumes one logical stream whose arrival rate
+fills 128-row micro-batches.  The ROADMAP's serving target is the
+opposite shape: thousands of small independent streams, each too slow to
+fill a micro-batch alone.  This runtime multiplexes them (DESIGN.md §9):
+
+  * **stream-tagged state** — every ring slot and every drained pair
+    carries a stream id; the join masks cross-stream pairs *on device*
+    (all level-1 impls), optionally with per-stream (θ, λ) looked up from
+    the :class:`~repro.runtime.tenants.TenantTable`;
+  * **request coalescing** — the :class:`~repro.runtime.router
+    .RequestRouter` packs sub-batch arrivals from many tenants into full
+    micro-batches in strict admission order, so per-arrival device cost
+    tracks *output* (SWOOP's invariant per tenant), not the number of
+    tenants; padding waste and queue delay are telemetered;
+  * **fixed-span dispatch** — the jitted step always scans exactly
+    ``span`` micro-batches (short tails ride as inert empty micro-batches
+    whose strips are all dead), so the runtime compiles **once** per
+    payload shape no matter how ragged the traffic;
+  * **fused embed→join** — with a :class:`FusedEmbedder`, submissions are
+    token batches and the LM forward + pooling + normalize runs *inside*
+    the same jit program as the join scan: embeddings never round-trip
+    through the host.
+
+Determinism: uids are assigned at admission (global arrival order), the
+router preserves that order exactly, and the engine scan is invariant to
+micro-batch splits — so the emitted pair set is invariant to coalescing
+boundaries, flush timing, and span size (tested property-style in
+``tests/test_runtime.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..engine.engine import (
+    EngineConfig,
+    StreamEngineBase,
+    init_telemetry,
+    make_micro_step,
+)
+from ..engine.window import init_window, push_with_overflow
+from .router import RequestRouter, TenantBackpressure
+from .tenants import TenantTable
+
+__all__ = [
+    "FusedEmbedder",
+    "MultiTenantRuntime",
+    "make_tenant_batch_step",
+    "TenantBackpressure",
+]
+
+_EMPTY_T = 3.0e30   # timestamp of inert pad rows in empty micro-batches
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedEmbedder:
+    """Embed-inside-the-join configuration for token submissions.
+
+    ``model_cfg.d_model`` must equal ``EngineConfig.d``; ``seq_len`` fixes
+    the token payload width (one compiled shape).  The embedding math is
+    :func:`repro.serving.embedder.pooled_unit_embed` — the same function
+    the host-side :class:`~repro.serving.embedder.LMEmbedder` jits, which
+    is what makes fused and host-round-trip results bit-identical.
+    """
+
+    model_cfg: ModelConfig
+    params: Any
+    seq_len: int
+
+
+def make_tenant_batch_step(
+    cfg: EngineConfig,
+    table: TenantTable,
+    fused: Optional[FusedEmbedder] = None,
+):
+    """Jitted multi-tenant request step (single device).
+
+    Signature: ``(state, telem, qs, tqs, uqs, sqs, nvs) → (state, telem,
+    bufs, masks)`` — :func:`repro.engine.engine.make_batch_step` plus the
+    ``sqs (n_micro, mb)`` stream-id lane; with ``fused``, ``qs`` is a
+    token stack ``(n_micro, mb, seq_len)`` i32 and the step's signature
+    gains a leading non-donated ``params`` pytree.  State and telemetry
+    are donated.
+    """
+    tau = table.tau_max
+
+    def ingest(state, q, tq, uq, n_valid, t_max, sq):
+        return push_with_overflow(
+            state, q, tq, uq, n_valid, t_max, tau, sq=sq
+        )
+
+    if fused is None:
+        def batch_step(state, telem, qs, tqs, uqs, sqs, nvs):
+            micro = make_micro_step(cfg, ingest, tenant_lookup=table.lookup)
+            (state, telem), (bufs, masks) = jax.lax.scan(
+                micro, (state, telem), (qs, tqs, uqs, sqs, nvs)
+            )
+            return state, telem, bufs, masks
+
+        return jax.jit(batch_step, donate_argnums=(0, 1))
+
+    # imported lazily: serving.service imports this package for the
+    # multi-tenant service facade, so a module-level import would cycle
+    from ..serving.embedder import pooled_unit_embed
+
+    model_cfg = fused.model_cfg
+
+    def fused_step(params, state, telem, qs, tqs, uqs, sqs, nvs):
+        def embed_fn(toks):
+            return pooled_unit_embed(params, model_cfg, toks)
+
+        micro = make_micro_step(
+            cfg, ingest, tenant_lookup=table.lookup, embed_fn=embed_fn
+        )
+        (state, telem), (bufs, masks) = jax.lax.scan(
+            micro, (state, telem), (qs, tqs, uqs, sqs, nvs)
+        )
+        return state, telem, bufs, masks
+
+    return jax.jit(fused_step, donate_argnums=(1, 2))
+
+
+class MultiTenantRuntime(StreamEngineBase):
+    """K logical streams multiplexed onto one stream-tagged engine.
+
+    ``submit(tenant, data, ts)`` admits a (possibly tiny) batch and
+    returns its global uids; ``flush()`` coalesces everything queued into
+    full micro-batches and dispatches them in fixed ``span``-sized scans
+    (``flush(final=True)`` also pads out a trailing partial micro-batch);
+    ``drain_by_tenant()`` returns each tenant's emitted pairs.  The
+    inherited :meth:`drain_arrays` / :meth:`stats` keep working on the
+    global stream.
+
+    Timestamps should be globally non-decreasing in admission order —
+    correctness never depends on it, but window eviction and the scan
+    impl's live-strip walk are tuned for it (same contract as the
+    single-tenant engine).
+    """
+
+    def __init__(
+        self,
+        cfg: EngineConfig,
+        table: TenantTable,
+        *,
+        span: int = 4,
+        max_queue_per_tenant: int = 65536,
+        fused: Optional[FusedEmbedder] = None,
+    ) -> None:
+        if cfg.emit_dense:
+            raise ValueError("emit_dense is the single-tenant test oracle")
+        if table.is_uniform:
+            # uniform tenants keep the static-scalar join path; the table's
+            # values are authoritative, so fold them into the config
+            th, lm = table.spec(0)
+            cfg = dataclasses.replace(cfg, theta=th, lam=lm)
+        if fused is not None and fused.model_cfg.d_model != cfg.d:
+            raise ValueError(
+                f"fused embedder d_model ({fused.model_cfg.d_model}) must "
+                f"equal EngineConfig.d ({cfg.d})"
+            )
+        if span < 1:
+            raise ValueError("span must be ≥ 1")
+        super().__init__(cfg)
+        self.table = table
+        self.span = span
+        self.fused = fused
+        self.router = RequestRouter(
+            table.n_tenants, max_queue_per_tenant=max_queue_per_tenant
+        )
+        self.state = init_window(cfg.capacity, cfg.d)
+        self.telem = init_telemetry()
+        self._step = make_tenant_batch_step(cfg, table, fused)
+        # uid → tenant map: a doubling-growth append buffer (4 B per item
+        # ever admitted — see ROADMAP on tenant-aware state)
+        self._uid_tenant_buf = np.empty((1024,), np.int32)
+        self._uid_tenant_n = 0
+        self._mask_uid0 = 0          # first uid the next drain's mask covers
+        self.padded_rows = 0         # inert rows in real micro-batches
+        self.empty_micro_batches = 0  # span-fill micro-batches (all dead)
+        self.spans_dispatched = 0
+        self.submitted_by_tenant: Dict[int, int] = {
+            t: 0 for t in range(table.n_tenants)
+        }
+        self.pairs_by_tenant: Dict[int, int] = {
+            t: 0 for t in range(table.n_tenants)
+        }
+
+    # ------------------------------------------------------------------ #
+    def push(self, vecs, ts):  # pragma: no cover - guardrail
+        raise NotImplementedError(
+            "MultiTenantRuntime routes arrivals through submit()/flush()"
+        )
+
+    def submit(
+        self, tenant: int, data: np.ndarray, ts: np.ndarray
+    ) -> np.ndarray:
+        """Admit one tenant's batch; returns its global uids.
+
+        ``data`` is ``(b, d)`` float vectors (callers normalize), or
+        ``(b, seq_len)`` int tokens in fused mode.  Nothing reaches the
+        device until :meth:`flush`.  Raises
+        :class:`~repro.runtime.router.TenantBackpressure` (admitting
+        nothing) when the tenant's queue cap would be exceeded.
+        """
+        tenant = self.table.validate_id(tenant)
+        ts = np.asarray(ts, np.float64).reshape(-1)
+        if self.fused is not None:
+            data = np.asarray(data, np.int32)
+            if data.ndim != 2 or data.shape[1] != self.fused.seq_len:
+                raise ValueError(
+                    f"fused submissions must be (b, {self.fused.seq_len}) "
+                    f"tokens, got {data.shape}"
+                )
+        else:
+            data = np.asarray(data, np.float32)
+            if data.ndim != 2 or data.shape[1] != self.cfg.d:
+                raise ValueError(
+                    f"submissions must be (b, {self.cfg.d}) vectors, "
+                    f"got {data.shape}"
+                )
+        b = data.shape[0]
+        if b != ts.shape[0]:
+            raise ValueError(f"{b} rows but {ts.shape[0]} timestamps")
+        if b == 0:
+            return np.empty((0,), np.int32)
+        uids = np.arange(self._next_uid, self._next_uid + b, dtype=np.int32)
+        self.router.admit(tenant, data, ts, uids)   # may raise; all-or-nothing
+        self._next_uid += b
+        n = self._uid_tenant_n
+        if n + b > self._uid_tenant_buf.size:
+            grown = np.empty((max(2 * self._uid_tenant_buf.size, n + b),),
+                             np.int32)
+            grown[:n] = self._uid_tenant_buf[:n]
+            self._uid_tenant_buf = grown
+        self._uid_tenant_buf[n:n + b] = tenant
+        self._uid_tenant_n = n + b
+        self.submitted_by_tenant[tenant] += b
+        return uids
+
+    # ------------------------------------------------------------------ #
+    def _dispatch(self, payload, ts, uids, sids) -> None:
+        """Pack one span of micro-batches and launch the device step."""
+        cfg = self.cfg
+        mb, span = cfg.micro_batch, self.span
+        rows = span * mb
+        n = payload.shape[0]
+        assert n <= rows
+        n_real = -(-n // mb)                     # micro-batches with any data
+        pad = rows - n
+        if self.fused is not None:
+            pl = np.zeros((rows, self.fused.seq_len), np.int32)
+        else:
+            pl = np.zeros((rows, cfg.d), np.float32)
+        pl[:n] = payload
+        tq = np.full(rows, _EMPTY_T, np.float32)  # inert: every strip dead
+        tq[:n] = ts
+        if n and n_real * mb > n:
+            # partial tail micro-batch: repeat its last valid timestamp so
+            # the strip filter's extremes stay honest (pad_request contract)
+            tq[n:n_real * mb] = ts[-1]
+        uq = np.full(rows, -1, np.int32)
+        uq[:n] = uids
+        sq = np.full(rows, -1, np.int32)
+        sq[:n] = sids
+        nvs = np.clip(n - mb * np.arange(span), 0, mb).astype(np.int32)
+
+        args = (
+            jnp.asarray(pl.reshape(span, mb, -1)),
+            jnp.asarray(tq.reshape(span, mb)),
+            jnp.asarray(uq.reshape(span, mb)),
+            jnp.asarray(sq.reshape(span, mb)),
+        )
+        if self.fused is not None:
+            self.state, self.telem, bufs, masks = self._step(
+                self.fused.params, self.state, self.telem, *args, nvs
+            )
+        else:
+            self.state, self.telem, bufs, masks = self._step(
+                self.state, self.telem, *args, nvs
+            )
+        self._pending.append(self._copier.submit(self._fetch, bufs, masks, nvs))
+        self.n_items += n
+        # padding waste = inert rows inside *real* micro-batches (they ride
+        # through the join); span-fill micro-batches are separate — their
+        # strips are all dead, so they cost scan steps but no join work
+        self.padded_rows += n_real * mb - n
+        self.empty_micro_batches += self.span - n_real
+        self.spans_dispatched += 1
+        # dense-equivalent traffic counts real micro-batches only (what the
+        # dense path would actually have fetched for this data)
+        self.bytes_dense_equiv += n_real * 4 * (
+            mb * self._global_capacity() + mb * mb
+        )
+
+    def flush(self, final: bool = False) -> int:
+        """Coalesce queued arrivals into micro-batches and dispatch them.
+
+        Dispatches every *full* micro-batch (in span-sized scans; a short
+        span rides out with inert empty micro-batches).  Rows short of a
+        micro-batch stay queued for the next flush — unless ``final=True``,
+        which pads the tail out (the end-of-stream / latency-deadline
+        case).  Returns the number of real rows dispatched.
+        """
+        mb = self.cfg.micro_batch
+        rows_span = mb * self.span
+        sent = 0
+        while len(self.router) >= rows_span:
+            self._dispatch(*self.router.take(rows_span))
+            sent += rows_span
+        rem = len(self.router)
+        take_n = rem if final else (rem // mb) * mb
+        if take_n:
+            self._dispatch(*self.router.take(take_n))
+            sent += take_n
+        return sent
+
+    # ------------------------------------------------------------------ #
+    def _tenant_of(self, uids: np.ndarray) -> np.ndarray:
+        return self._uid_tenant_buf[:self._uid_tenant_n][uids]
+
+    def drain_arrays(self, return_masks: bool = False):
+        """As :meth:`StreamEngineBase.drain_arrays`, tracking the uid range
+        each drain's masks cover so per-tenant attribution stays aligned
+        however the caller mixes global and per-tenant drains."""
+        ua, ub, sc, mask = super().drain_arrays(return_masks=True)
+        self._mask_uid0 += mask.shape[0]
+        if return_masks:
+            return ua, ub, sc, mask
+        return ua, ub, sc
+
+    def drain_by_tenant(
+        self, return_masks: bool = False
+    ) -> Dict[int, Tuple[np.ndarray, ...]]:
+        """Everything emitted since the last drain, grouped by stream.
+
+        Returns ``{tenant: (uid_a, uid_b, score)}`` (uids are global; map
+        back with the uids :meth:`submit` returned).  With
+        ``return_masks=True`` each tuple gains the tenant's per-row match
+        masks, aligned with its dispatched uids in admission order.  Pair
+        attribution uses ``uid_a``'s stream — the join's stream-equality
+        mask guarantees ``uid_b`` agrees.
+        """
+        ua, ub, sc, mask = self.drain_arrays(return_masks=True)
+        mask_uids = np.arange(
+            self._mask_uid0 - mask.shape[0], self._mask_uid0, dtype=np.int64
+        )
+        k = self.table.n_tenants
+        tids = np.arange(k)
+
+        def group(keys, *values):
+            # one stable sort + K boundary lookups — O(n log n + K), not a
+            # full-array scan per tenant; stable keeps emission/admission
+            # order within each tenant
+            order = np.argsort(keys, kind="stable")
+            ks = keys[order]
+            lo = np.searchsorted(ks, tids)
+            hi = np.searchsorted(ks, tids, side="right")
+            return [
+                tuple(v[order[a:b]] for v in values)
+                for a, b in zip(lo, hi)
+            ]
+
+        pair_t = self._tenant_of(ua) if ua.size else np.empty((0,), np.int32)
+        mask_t = (
+            self._tenant_of(mask_uids) if mask.size else np.empty((0,), np.int32)
+        )
+        pair_groups = group(pair_t, ua, ub, sc)
+        mask_groups = group(mask_t, mask) if return_masks else None
+        out: Dict[int, Tuple[np.ndarray, ...]] = {}
+        for t in range(k):
+            rec: Tuple[np.ndarray, ...] = pair_groups[t]
+            self.pairs_by_tenant[t] += rec[0].size
+            if return_masks:
+                rec = rec + mask_groups[t]
+            out[t] = rec
+        return out
+
+    # ------------------------------------------------------------------ #
+    def tenant_stats(self, tenant: int) -> dict:
+        tenant = self.table.validate_id(tenant)
+        th, lm = self.table.spec(tenant)
+        return {
+            "theta": th,
+            "lam": lm,
+            "submitted": self.submitted_by_tenant[tenant],
+            "queued": self.router.queued_by_tenant[tenant],
+            "pairs_drained": self.pairs_by_tenant[tenant],
+        }
+
+    def stats(self) -> dict:
+        rt = self.router.telemetry
+        disp = max(rt.items_dispatched, 1)
+        return {
+            **super().stats(),
+            "n_tenants": self.table.n_tenants,
+            "items_queued": len(self.router),
+            "items_rejected": rt.items_rejected,
+            "spans_dispatched": self.spans_dispatched,
+            "padded_rows": self.padded_rows,
+            "empty_micro_batches": self.empty_micro_batches,
+            "padding_waste": self.padded_rows
+            / max(self.padded_rows + rt.items_dispatched, 1),
+            "queue_delay_mean_s": rt.queue_delay_sum_s / disp,
+            "queue_delay_max_s": rt.queue_delay_max_s,
+        }

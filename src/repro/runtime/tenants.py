@@ -1,0 +1,110 @@
+"""Per-stream join parameters: the tenant table.
+
+The paper runs one stream under one global ``(θ, λ)``.  A service
+multiplexing thousands of logical streams wants per-tenant retention
+semantics ("Fishing in the Stream": each consumer has its own horizon and
+quality bar), so the runtime keeps a small device-resident table of
+``(θ_k, λ_k)`` and the join looks a row's parameters up by its stream id
+(DESIGN.md §9).  A pair's stream is its query row's stream — the join's
+stream-equality mask guarantees both sides agree — so query-side values
+govern the whole pair.
+
+The table is deliberately tiny (K scalars per field): it is closed over by
+the jitted batch step and becomes a compile-time constant, so changing a
+tenant's parameters means building a new runtime step — the same contract
+as changing ``EngineConfig``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.similarity import time_horizon
+
+__all__ = ["TenantTable"]
+
+
+class TenantTable:
+    """Immutable per-stream ``(theta, lam)`` table with device mirrors.
+
+    ``thetas``/``lams`` are host float arrays of length ``n_tenants``;
+    ``lookup`` is what the jitted micro step calls to turn a stream-id lane
+    into per-row parameter lanes (or ``None`` when every tenant shares the
+    same values, which keeps the faster static-scalar join path).
+    """
+
+    def __init__(self, thetas: Sequence[float], lams: Sequence[float]) -> None:
+        thetas = np.asarray(thetas, np.float32).reshape(-1)
+        lams = np.asarray(lams, np.float32).reshape(-1)
+        if thetas.size == 0:
+            raise ValueError("tenant table must have at least one stream")
+        if thetas.shape != lams.shape:
+            raise ValueError(
+                f"thetas ({thetas.shape}) and lams ({lams.shape}) disagree"
+            )
+        for k, (th, lm) in enumerate(zip(thetas.tolist(), lams.tolist())):
+            if not 0.0 < th <= 1.0:
+                raise ValueError(f"tenant {k}: theta must be in (0, 1], got {th}")
+            if lm < 0.0:
+                raise ValueError(f"tenant {k}: lam must be ≥ 0, got {lm}")
+        self.thetas = thetas
+        self.lams = lams
+        self._theta_d = jnp.asarray(thetas)
+        self._lam_d = jnp.asarray(lams)
+
+    @classmethod
+    def uniform(cls, n_tenants: int, theta: float, lam: float) -> "TenantTable":
+        return cls([theta] * n_tenants, [lam] * n_tenants)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_tenants(self) -> int:
+        return int(self.thetas.size)
+
+    @property
+    def is_uniform(self) -> bool:
+        return bool(
+            np.all(self.thetas == self.thetas[0])
+            and np.all(self.lams == self.lams[0])
+        )
+
+    @property
+    def tau_max(self) -> float:
+        """The widest tenant horizon — what sizes the shared ring window
+        (and its live-slot overflow accounting, conservatively)."""
+        return max(
+            time_horizon(float(t), float(l))
+            for t, l in zip(self.thetas, self.lams)
+        )
+
+    def spec(self, tenant: int) -> Tuple[float, float]:
+        return float(self.thetas[tenant]), float(self.lams[tenant])
+
+    def validate_id(self, tenant: int) -> int:
+        tenant = int(tenant)
+        if not 0 <= tenant < self.n_tenants:
+            raise ValueError(
+                f"unknown stream id {tenant} (table has {self.n_tenants})"
+            )
+        return tenant
+
+    # ------------------------------------------------------------------ #
+    def lookup(
+        self, sq: jax.Array
+    ) -> Optional[Tuple[jax.Array, jax.Array]]:
+        """Stream-id lane → per-row ``(theta_q, lam_q)`` lanes (traced).
+
+        Returns ``None`` for uniform tables so the join keeps its static
+        scalars (identical results, one fewer lane through the kernel).
+        Pad rows carry ``sq = -1``; the clip sends them to tenant 0, whose
+        finite values are inert — pad rows can never emit (uid = -1) and
+        never loosen the min-based pruning bounds.
+        """
+        if self.is_uniform:
+            return None
+        idx = jnp.clip(sq.astype(jnp.int32), 0, self.n_tenants - 1)
+        return self._theta_d[idx], self._lam_d[idx]

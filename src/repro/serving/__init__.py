@@ -1,4 +1,9 @@
-"""Serving: LM embedder + streaming similarity self-join service."""
+"""Serving: LM embedder + streaming similarity self-join services
+(single-stream and multi-tenant)."""
 
-from .embedder import LMEmbedder  # noqa: F401
-from .service import SSSJService, ServiceStats  # noqa: F401
+from .embedder import LMEmbedder, pooled_unit_embed  # noqa: F401
+from .service import (  # noqa: F401
+    MultiTenantSSSJService,
+    SSSJService,
+    ServiceStats,
+)

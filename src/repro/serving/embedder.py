@@ -3,11 +3,16 @@
 Any configured architecture (``--arch``) embeds a batch of token sequences:
 final-layer hidden states are mean-pooled over non-pad positions and
 ℓ2-normalized — unit vectors, the paper's input representation.
+
+:func:`pooled_unit_embed` is the single source of truth for that mapping:
+:class:`LMEmbedder` jits it for host-side use, and the multi-tenant
+runtime's fused embed→join path (:mod:`repro.runtime`) traces the *same
+function* inside its join scan — which is what makes the fused path
+bit-identical to the host round trip (tested in ``tests/test_runtime.py``).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -17,7 +22,30 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models.lm import init_lm, lm_forward
 
-__all__ = ["LMEmbedder"]
+__all__ = ["LMEmbedder", "pooled_unit_embed"]
+
+
+def pooled_unit_embed(
+    params, cfg: ModelConfig, tokens: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Tokens ``(B, S)`` → unit embeddings ``(B, d_model)`` (f32, traced).
+
+    Mean-pool final hidden states over non-pad (``token != 0``) positions,
+    then ℓ2-normalize.  Pure row-wise math: an all-pad row embeds to the
+    zero vector (inert under the join's cosine threshold).
+    """
+    if mask is None:
+        mask = tokens != 0
+    _, _, _, hidden = lm_forward(
+        params, cfg, tokens=tokens, return_hidden=True,
+        compute_dtype=jnp.float32,
+    )
+    m = mask.astype(jnp.float32)[..., None]
+    pooled = (hidden.astype(jnp.float32) * m).sum(1) / jnp.maximum(
+        m.sum(1), 1.0
+    )
+    norm = jnp.linalg.norm(pooled, axis=-1, keepdims=True)
+    return pooled / jnp.maximum(norm, 1e-9)
 
 
 class LMEmbedder:
@@ -29,16 +57,7 @@ class LMEmbedder:
 
         @jax.jit
         def _embed(params, tokens, mask):
-            _, _, _, hidden = lm_forward(
-                params, cfg, tokens=tokens, return_hidden=True,
-                compute_dtype=jnp.float32,
-            )
-            m = mask.astype(jnp.float32)[..., None]
-            pooled = (hidden.astype(jnp.float32) * m).sum(1) / jnp.maximum(
-                m.sum(1), 1.0
-            )
-            norm = jnp.linalg.norm(pooled, axis=-1, keepdims=True)
-            return pooled / jnp.maximum(norm, 1e-9)
+            return pooled_unit_embed(params, cfg, tokens, mask)
 
         self._embed = _embed
 

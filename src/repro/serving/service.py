@@ -6,18 +6,30 @@ vectors), unit-normalized, and fed to the device-resident
 :class:`repro.engine.StreamEngine`; the compacted pair arrays it drains
 drive near-duplicate grouping (union-find) — application #2 — or trend
 detection (growing groups within the horizon) — application #1.
+
+:class:`MultiTenantSSSJService` is the same loop over the multi-tenant
+runtime (DESIGN.md §9): many logical streams coalesce onto one engine,
+each with its own ``(θ, λ)``, and the union-find keys are **namespaced**
+``(tenant, uid)`` tuples — the device join already guarantees no
+cross-stream pair exists, and the namespacing makes cross-tenant grouping
+structurally impossible on the host too.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
 from ..engine.engine import EngineConfig, StreamEngine
+from ..runtime import FusedEmbedder, MultiTenantRuntime, TenantTable
 
-__all__ = ["SSSJService", "ServiceStats"]
+__all__ = [
+    "SSSJService",
+    "ServiceStats",
+    "MultiTenantSSSJService",
+]
 
 
 @dataclasses.dataclass
@@ -150,3 +162,124 @@ class SSSJService:
         """Groups that reached ``min_size`` — the paper's trend-detection
         application (a burst of mutually-similar items within the horizon)."""
         return [g for g in self.duplicate_groups() if len(g) >= min_size]
+
+
+class MultiTenantSSSJService:
+    """Near-duplicate / trend service over K coalesced logical streams.
+
+    One device engine serves every tenant (DESIGN.md §9): ``submit``
+    enqueues a tenant's documents, ``flush`` coalesces queued arrivals
+    across tenants into full micro-batches, drains the emitted pairs, and
+    unions them under **namespaced** keys ``(tenant, uid)`` — so even a
+    host-side bug could never merge two tenants' groups.  Per-tenant
+    ``(θ, λ)`` comes from the :class:`~repro.runtime.TenantTable`; vectors
+    are unit-normalized here (or embedded on device via ``fused``).
+    """
+
+    def __init__(
+        self,
+        table: TenantTable,
+        dim: int,
+        capacity: int = 4096,
+        micro_batch: int = 64,
+        max_pairs: int = 4096,
+        tile_k: Optional[int] = None,
+        span: int = 4,
+        max_queue_per_tenant: int = 65536,
+        fused: Optional[FusedEmbedder] = None,
+    ) -> None:
+        th0, lm0 = table.spec(0)
+        cfg = EngineConfig(
+            theta=th0, lam=lm0, capacity=capacity, d=dim,
+            micro_batch=micro_batch, max_pairs=max_pairs,
+            tile_k=tile_k or micro_batch * micro_batch,
+            block_q=micro_batch, block_w=micro_batch,
+            chunk_d=min(dim, 128),
+        )
+        self.runtime = MultiTenantRuntime(
+            cfg, table, span=span,
+            max_queue_per_tenant=max_queue_per_tenant, fused=fused,
+        )
+        self.table = table
+        self.fused = fused
+        self.groups = _UnionFind()
+        # global uid → per-tenant local uid (dense per-tenant numbering, the
+        # namespace the caller reasons in)
+        self._local_of: Dict[int, int] = {}
+        self._next_local = [0] * table.n_tenants
+
+    # ------------------------------------------------------------------ #
+    def submit(
+        self,
+        tenant: int,
+        batch: np.ndarray,           # (B, dim) vectors or (B, S) tokens
+        timestamps: np.ndarray,      # (B,)
+    ) -> np.ndarray:
+        """Enqueue one tenant's documents; returns their *local* uids.
+
+        Nothing reaches the device until :meth:`flush` — that is the point:
+        a tenant submitting 3 documents at a time still rides full
+        micro-batches once enough tenants queue up.
+        """
+        if self.fused is None:
+            vecs = np.asarray(batch, np.float32)
+            norms = np.linalg.norm(vecs, axis=1, keepdims=True)
+            batch = vecs / np.maximum(norms, 1e-9)
+        uids = self.runtime.submit(tenant, batch, np.asarray(timestamps))
+        base = self._next_local[tenant]
+        local = np.arange(base, base + uids.size, dtype=np.int64)
+        self._next_local[tenant] = base + uids.size
+        for g, l in zip(uids.tolist(), local.tolist()):
+            self._local_of[g] = l
+        return local
+
+    def flush(
+        self, final: bool = False
+    ) -> Dict[int, List[Tuple[int, int, float]]]:
+        """Dispatch queued arrivals, drain, and group the emitted pairs.
+
+        Defaults to ``final=False`` — the coalescing contract: only full
+        micro-batches dispatch, rows short of one stay queued (same default
+        as :meth:`MultiTenantRuntime.flush`).  Pass ``final=True`` at end
+        of stream or on a latency deadline to pad the tail out.  Returns
+        ``{tenant: [(local_uid_newer, local_uid_older, score)]}`` for
+        tenants that emitted anything this flush.
+        """
+        self.runtime.flush(final=final)
+        per = self.runtime.drain_by_tenant()
+        out: Dict[int, List[Tuple[int, int, float]]] = {}
+        union = self.groups.union
+        loc = self._local_of
+        for t, (ua, ub, sc) in per.items():
+            if ua.size == 0:
+                continue
+            pairs = [
+                (loc[a], loc[b], s)
+                for a, b, s in zip(ua.tolist(), ub.tolist(), sc.tolist())
+            ]
+            for a, b, _ in pairs:
+                union((t, a), (t, b))          # namespaced: (tenant, uid)
+            out[t] = pairs
+        return out
+
+    # ------------------------------------------------------------------ #
+    def duplicate_groups(self, tenant: int) -> List[List[int]]:
+        """Connected components of one tenant's similar-pair graph."""
+        comp: Dict[Hashable, List[int]] = {}
+        for key in list(self.groups.parent):
+            t, u = key
+            if t != tenant:
+                continue
+            comp.setdefault(self.groups.find(key), []).append(u)
+        return sorted(sorted(v) for v in comp.values() if len(v) > 1)
+
+    def trending(self, tenant: int, min_size: int = 3) -> List[List[int]]:
+        return [
+            g for g in self.duplicate_groups(tenant) if len(g) >= min_size
+        ]
+
+    def tenant_stats(self, tenant: int) -> dict:
+        return self.runtime.tenant_stats(tenant)
+
+    def stats(self) -> dict:
+        return self.runtime.stats()

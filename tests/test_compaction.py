@@ -232,6 +232,108 @@ def test_tile_candidates_order_is_stream_order(rng):
     assert got == [(100 + a, b) for a, b in hits[:3]]
 
 
+def test_scan_impl_exact_on_wrapped_ring(rng):
+    """The cursor-anchored live-strip walk must stay exact when the ring
+    has wrapped — the newest item sits mid-array and the live range spans
+    the wrap boundary.  (The walk is derived from the max uid, so this is
+    the case where ``dist`` actually wraps modulo n_strips.)"""
+    d, W, Q = 64, 256, 32
+    # ring layout: uids [200..391] written cyclically → newest at slot 103
+    uw_np = np.roll(np.arange(200, 200 + W, dtype=np.int32), 104)
+    tw_np = np.roll(np.linspace(0.0, 25.6, W).astype(np.float32), 104)
+    w = rng.standard_normal((W, d)).astype(np.float32)
+    q = w[np.roll(np.arange(W), -104)[-Q:]].copy()   # dup the newest items
+    q += 0.01 * rng.standard_normal((Q, d)).astype(np.float32)
+    w /= np.linalg.norm(w, axis=1, keepdims=True)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    tq = jnp.full((Q,), 25.7)
+    uq = jnp.arange(1000, 1000 + Q, dtype=jnp.int32)
+    kw = dict(theta=0.6, lam=0.5, tile_k=64, block_q=32, block_w=32,
+              chunk_d=32)
+    ref = sssj_join_candidates(
+        jnp.asarray(q), jnp.asarray(w), tq, jnp.asarray(tw_np), uq,
+        jnp.asarray(uw_np), impl="dense", **kw,
+    )
+    got = sssj_join_candidates(
+        jnp.asarray(q), jnp.asarray(w), tq, jnp.asarray(tw_np), uq,
+        jnp.asarray(uw_np), impl="scan", **kw,
+    )
+    assert int(np.asarray(ref.cands.emitted).sum()) > 0   # non-trivial case
+    for name in ("uid_a", "uid_b", "kept", "emitted"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got.cands, name)),
+            np.asarray(getattr(ref.cands, name)), err_msg=name,
+        )
+    np.testing.assert_allclose(
+        np.asarray(got.cands.score), np.asarray(ref.cands.score), atol=1e-5
+    )
+    # the walk only visited strips near the cursor: expired strips (far
+    # behind slot 103 in ring age) report zero executed chunks
+    assert int((np.asarray(got.iters)[0] > 0).sum()) < np.asarray(got.iters).shape[1]
+
+
+@pytest.mark.parametrize("impl", ["dense", "scan", "pallas"])
+def test_stream_lanes_without_per_row_params(impl, rng):
+    """Uniform tenants pass stream lanes alone (theta_q/lam_q = None) —
+    every impl must accept that and mask cross-stream pairs under the
+    static (θ, λ).  Regression: the pallas call once appended None inputs
+    for the missing per-row lanes."""
+    Q, W, d = 32, 64, 64
+    q, w, tq, tw, uq, uw = _stream(rng, Q, W, d, clustered=True)
+    sq = jnp.asarray(rng.integers(0, 2, Q).astype(np.int32))
+    sw = jnp.asarray(rng.integers(0, 2, W).astype(np.int32))
+    kw = dict(theta=0.5, lam=0.1, tile_k=1024, block_q=32, block_w=32,
+              chunk_d=32, sq=sq, sw=sw)
+    got = sssj_join_candidates(q, w, tq, tw, uq, uw, impl=impl, **kw)
+    scores = sssj_join_ref(
+        q, w, tq[:, None], tw[:, None], uq[:, None], uw[:, None],
+        theta=0.5, lam=0.1, sq=sq[:, None], sw=sw[:, None],
+    )
+    truth = _dense_truth(scores, uq, uw)
+    pairs = _buffer_pairs(merge_candidates(got.cands, max_pairs=4096))
+    assert pairs.keys() == truth.keys() and len(truth) > 0
+    for k in pairs:
+        assert abs(pairs[k] - truth[k]) < 1e-5
+
+
+@pytest.mark.parametrize("impl", ["dense", "scan", "pallas"])
+def test_multi_tenant_lanes_match_across_impls(impl, rng):
+    """Stream-equality masking and per-row (θ, λ) must behave identically
+    in all three level-1 implementations: candidates equal the dense
+    oracle's, cross-stream pairs never appear, and each row obeys its own
+    tenant's threshold."""
+    Q, W, d = 64, 96, 64
+    q, w, tq, tw, uq, uw = _stream(rng, Q, W, d, clustered=True)
+    sq = jnp.asarray(rng.integers(0, 3, Q).astype(np.int32))
+    sw = jnp.asarray(rng.integers(0, 3, W).astype(np.int32))
+    thetas = np.array([0.3, 0.6, 0.9], np.float32)
+    lams = np.array([0.2, 0.05, 1.0], np.float32)
+    theta_q = jnp.asarray(thetas[np.asarray(sq)])
+    lam_q = jnp.asarray(lams[np.asarray(sq)])
+    kw = dict(theta=0.5, lam=0.1, tile_k=1024, block_q=32, block_w=32,
+              chunk_d=32, sq=sq, sw=sw, theta_q=theta_q, lam_q=lam_q)
+    got = sssj_join_candidates(q, w, tq, tw, uq, uw, impl=impl, **kw)
+    # brute-force truth with per-row parameters and the stream mask
+    sims = np.asarray(q) @ np.asarray(w).T
+    dt = np.abs(np.asarray(tq)[:, None] - np.asarray(tw)[None, :])
+    dec = sims * np.exp(-np.asarray(lam_q)[:, None] * dt)
+    ok = (np.asarray(uw)[None, :] >= 0) & (
+        np.asarray(uq)[:, None] > np.asarray(uw)[None, :]
+    ) & (np.asarray(sq)[:, None] == np.asarray(sw)[None, :])
+    emit = ok & (dec >= np.asarray(theta_q)[:, None])
+    truth = {
+        (int(np.asarray(uq)[a]), int(np.asarray(uw)[b])): float(dec[a, b])
+        for a, b in zip(*np.nonzero(emit))
+    }
+    buf = merge_candidates(got.cands, max_pairs=4096)
+    pairs = _buffer_pairs(buf)
+    assert int(buf.n_dropped) == 0 and int(buf.n_dropped_tile) == 0
+    assert pairs.keys() == truth.keys()
+    for k in pairs:
+        assert abs(pairs[k] - truth[k]) < 1e-5
+    np.testing.assert_array_equal(np.asarray(got.row_mask), emit.any(axis=1))
+
+
 @pytest.mark.parametrize("Q", [96, 90])   # aligned and ragged query counts
 def test_scan_impl_skips_expired_strips(Q, rng):
     """The scan impl's strip-level time filter must fire for a window

@@ -1,0 +1,378 @@
+"""Multi-tenant streaming runtime (DESIGN.md §9): per-tenant exactness
+under arbitrary coalescing, stream isolation, overflow accounting,
+backpressure, config validation, and the fused embed→join path."""
+
+import numpy as np
+import pytest
+
+from repro.data.synth import dense_embedding_stream, planted_duplicates
+from repro.engine import EngineConfig
+from repro.runtime import (
+    MultiTenantRuntime,
+    TenantBackpressure,
+    TenantTable,
+)
+
+K = 8
+D = 64
+THETAS = [0.8, 0.7, 0.9, 0.8, 0.75, 0.85, 0.8, 0.7]
+LAMS = [0.05, 0.1, 0.02, 0.2, 0.05, 0.08, 0.01, 0.15]
+
+
+def _cfg(**kw):
+    base = dict(theta=0.8, lam=0.05, capacity=1024, d=D, micro_batch=32,
+                max_pairs=2048, block_q=32, block_w=32, chunk_d=32)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _tenant_streams(n_per=72, seed0=100):
+    """K independent streams, interleaved into one global time order."""
+    streams = [
+        dense_embedding_stream(n_per, D, seed=seed0 + k, rate=1.0)
+        for k in range(K)
+    ]
+    events = sorted(
+        (float(streams[k][1][i]), k, i)
+        for k in range(K) for i in range(n_per)
+    )
+    return streams, events
+
+
+def _truths(streams, uid_maps):
+    """Per-tenant brute-force pair sets, mapped to global uids."""
+    out = []
+    for k, (v, t) in enumerate(streams):
+        local = planted_duplicates(v, t, THETAS[k], LAMS[k])
+        out.append({
+            (min(uid_maps[k][a], uid_maps[k][b]),
+             max(uid_maps[k][a], uid_maps[k][b]))
+            for a, b in local
+        })
+    return out
+
+
+def _run(streams, events, submit_plan, span=2, flush_every=None, **cfg_kw):
+    """Drive one runtime over the interleaved streams.
+
+    ``submit_plan`` groups consecutive events into submit calls (list of
+    chunk lengths, cycled); ``flush_every`` interposes non-final flushes —
+    together they realize one arbitrary coalescing of the same stream.
+    """
+    table = TenantTable(THETAS, LAMS)
+    rt = MultiTenantRuntime(_cfg(**cfg_kw), table, span=span)
+    uid_maps = [dict() for _ in range(K)]
+    i, plan_i, n_flush = 0, 0, 0
+    while i < len(events):
+        n = submit_plan[plan_i % len(submit_plan)]
+        plan_i += 1
+        chunk = events[i:i + n]
+        i += len(chunk)
+        # consecutive same-tenant events submit together; others 1-by-1
+        j = 0
+        while j < len(chunk):
+            k = chunk[j][1]
+            run = [chunk[j]]
+            while j + 1 < len(chunk) and chunk[j + 1][1] == k:
+                j += 1
+                run.append(chunk[j])
+            v, t = streams[k]
+            idx = [e[2] for e in run]
+            uids = rt.submit(k, v[idx], t[idx])
+            for ii, u in zip(idx, uids.tolist()):
+                uid_maps[k][ii] = u
+            j += 1
+        n_flush += 1
+        if flush_every and n_flush % flush_every == 0:
+            rt.flush()
+    rt.flush(final=True)
+    per = rt.drain_by_tenant()
+    return rt, per, uid_maps
+
+
+def _pair_sets(per):
+    return [
+        {(min(a, b), max(a, b))
+         for a, b in zip(per[k][0].tolist(), per[k][1].tolist())}
+        for k in range(K)
+    ]
+
+
+# --------------------------------------------------------------------- #
+# tentpole acceptance: K ≥ 8 interleaved streams, exact per-tenant pair
+# sets, invariant to coalescing boundaries
+# --------------------------------------------------------------------- #
+def test_multi_tenant_exact_and_coalescing_invariant():
+    streams, events = _tenant_streams()
+    ref_rt, ref_per, ref_maps = _run(streams, events, submit_plan=[1])
+    truths = _truths(streams, ref_maps)
+    ref_sets = _pair_sets(ref_per)
+    for k in range(K):
+        assert ref_sets[k] == truths[k], f"tenant {k}"
+        # scores clear the tenant's own threshold
+        assert (ref_per[k][2] >= THETAS[k] - 1e-6).all(), f"tenant {k}"
+    assert ref_rt.pairs_dropped == 0 and ref_rt.overflow == 0
+
+    # arbitrary coalescing splits: chunked submits, interleaved early
+    # flushes, different spans and micro-batches — identical emissions.
+    # uid assignment follows admission order, which all plans share, so
+    # uid maps (and hence mapped pair sets) must agree exactly.
+    rng = np.random.default_rng(0)
+    rand_plan = rng.integers(1, 40, 50).tolist()
+    for plan, flush_every, span, mb in [
+        ([7], 3, 2, 32),                  # small uneven submits
+        ([160], None, 4, 32),             # big submits, one final flush
+        (rand_plan, 2, 1, 32),            # random chunking, eager flushes
+        ([13], None, 3, 64),              # different micro-batch size
+    ]:
+        rt, per, maps = _run(
+            streams, events, submit_plan=plan, flush_every=flush_every,
+            span=span, micro_batch=mb, block_q=min(mb, 32),
+        )
+        assert maps == ref_maps
+        assert _pair_sets(per) == ref_sets, (plan, flush_every, span, mb)
+        assert rt.pairs_dropped == 0
+
+
+def test_no_cross_stream_pairs_on_identical_streams():
+    """Feed every tenant the *same* vectors at the same timestamps: any
+    cross-stream leak would pair items across tenants immediately."""
+    table = TenantTable.uniform(4, 0.9, 0.05)
+    rt = MultiTenantRuntime(_cfg(), table, span=2)
+    vecs, ts = dense_embedding_stream(64, D, seed=5, rate=2.0)
+    uid_tenant = {}
+    for i in range(64):
+        for k in range(4):
+            u = rt.submit(k, vecs[i:i + 1], ts[i:i + 1])
+            uid_tenant[int(u[0])] = k
+    rt.flush(final=True)
+    ua, ub, _ = rt.drain_arrays()
+    assert ua.size > 0        # the planted duplicates do pair within-stream
+    for a, b in zip(ua.tolist(), ub.tolist()):
+        assert uid_tenant[a] == uid_tenant[b]
+    # every tenant sees the same within-stream pair set
+    per = rt.drain_by_tenant()   # empty (already drained) — use counters
+    truth = planted_duplicates(vecs, ts, 0.9, 0.05)
+    assert ua.size == 4 * len(truth)
+    assert all(per[k][0].size == 0 for k in range(4))
+
+
+def test_overflow_counters_sum_exact_per_level():
+    """Acceptance: under tight budgets the per-level drop counters still
+    sum exactly to the true pair count, and the match mask stays exact."""
+    streams, events = _tenant_streams(n_per=40)
+    ref_rt, ref_per, maps = _run(streams, events, submit_plan=[9])
+    truth_total = sum(len(s) for s in _truths(streams, maps))
+    assert ref_rt.pairs_dropped == 0
+
+    for kw in (dict(max_pairs=2), dict(tile_k=1)):
+        rt, per, m2 = _run(streams, events, submit_plan=[9], **kw)
+        s = rt.stats()
+        survivors = sum(per[k][0].size for k in range(K))
+        assert s["pairs_emitted"] == survivors
+        assert survivors + s["pairs_dropped"] == truth_total, kw
+        assert (
+            s["pairs_dropped"]
+            == s["pairs_dropped_budget"] + s["pairs_dropped_tile"]
+        )
+        # survivors are a subset of some tenant's truth (never cross-stream)
+        truths = _truths(streams, m2)
+        for k in range(K):
+            got = {(min(a, b), max(a, b))
+                   for a, b in zip(per[k][0].tolist(), per[k][1].tolist())}
+            assert got <= truths[k]
+
+
+def test_match_masks_ride_per_tenant():
+    streams, events = _tenant_streams(n_per=48)
+    table = TenantTable(THETAS, LAMS)
+    rt = MultiTenantRuntime(_cfg(), table, span=2)
+    uid_maps = [dict() for _ in range(K)]
+    for _, k, i in events:
+        v, t = streams[k]
+        u = rt.submit(k, v[i:i + 1], t[i:i + 1])
+        uid_maps[k][i] = int(u[0])
+    rt.flush(final=True)
+    per = rt.drain_by_tenant(return_masks=True)
+    truths = _truths(streams, uid_maps)
+    for k in range(K):
+        ua, ub, sc, mask = per[k]
+        assert mask.shape[0] == 48
+        # the mask marks the newer side of each pair, in this tenant's
+        # admission order
+        order = sorted(uid_maps[k].values())
+        newer = {max(a, b) for a, b in truths[k]}
+        want = np.array([u in newer for u in order])
+        np.testing.assert_array_equal(mask, want, err_msg=f"tenant {k}")
+
+
+# --------------------------------------------------------------------- #
+# router: backpressure, telemetry, validation
+# --------------------------------------------------------------------- #
+def test_backpressure_is_all_or_nothing():
+    table = TenantTable.uniform(2, 0.9, 0.1)
+    rt = MultiTenantRuntime(_cfg(), table, max_queue_per_tenant=10)
+    vecs, ts = dense_embedding_stream(16, D, seed=1)
+    rt.submit(0, vecs[:8], ts[:8])
+    with pytest.raises(TenantBackpressure):
+        rt.submit(0, vecs[8:12], ts[8:12])      # 8 + 4 > 10
+    # nothing from the failed submit was admitted; tenant 1 is unaffected
+    assert rt.stats()["items_queued"] == 8
+    assert rt.stats()["items_rejected"] == 4
+    rt.submit(1, vecs[8:], ts[8:])
+    rt.submit(0, vecs[8:10], ts[8:10])          # exactly at the cap
+    rt.flush(final=True)
+    assert rt.n_items == 18
+
+
+def test_padding_telemetry_counts_waste():
+    table = TenantTable.uniform(2, 0.9, 0.1)
+    rt = MultiTenantRuntime(_cfg(micro_batch=32), table, span=2)
+    vecs, ts = dense_embedding_stream(40, D, seed=2)
+    rt.submit(0, vecs, ts)
+    rt.flush(final=True)     # 40 rows → 2 micro-batches (64) in one span
+    s = rt.stats()
+    assert s["n_items"] == 40
+    assert s["padded_rows"] == 2 * 32 - 40
+    assert 0.0 < s["padding_waste"] < 1.0
+    assert s["queue_delay_max_s"] >= 0.0
+
+
+def test_tenant_table_validation():
+    with pytest.raises(ValueError):
+        TenantTable([], [])
+    with pytest.raises(ValueError):
+        TenantTable([0.5, 1.5], [0.1, 0.1])
+    with pytest.raises(ValueError):
+        TenantTable([0.5], [-0.1])
+    with pytest.raises(ValueError):
+        TenantTable([0.5, 0.6], [0.1])
+    t = TenantTable([0.5, 0.6], [0.1, 0.2])
+    assert not t.is_uniform and t.n_tenants == 2
+    assert TenantTable.uniform(3, 0.9, 0.1).is_uniform
+    with pytest.raises(ValueError):
+        t.validate_id(2)
+    rt = MultiTenantRuntime(_cfg(), TenantTable.uniform(2, 0.9, 0.1))
+    with pytest.raises(ValueError):
+        rt.submit(0, np.zeros((2, D + 1), np.float32), np.zeros(2))
+    with pytest.raises(NotImplementedError):
+        rt.push(np.zeros((1, D), np.float32), np.zeros(1))
+
+
+def test_engine_config_validation():
+    """Satellite: misconfigurations fail at construction with clear
+    messages, not as downstream shape errors inside the jitted scan."""
+    ok = _cfg()
+    assert ok.micro_batch <= ok.capacity
+    cases = [
+        dict(micro_batch=2048),            # micro_batch > capacity
+        dict(max_pairs=0),
+        dict(tile_k=-1),
+        dict(micro_batch=0),
+        dict(capacity=0),
+        dict(d=0),
+        dict(use_ref=True, join_impl="pallas"),   # impl contradiction
+        dict(theta=0.0),
+        dict(theta=1.5),
+        dict(lam=-0.1),
+        dict(join_impl="nope"),
+        dict(shard_k=0),
+        dict(chunk_d=0),
+    ]
+    for kw in cases:
+        with pytest.raises(ValueError):
+            _cfg(**kw)
+
+
+# --------------------------------------------------------------------- #
+# fused embed→join
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def embedder():
+    import jax
+    from repro.configs import ARCHS
+    from repro.serving.embedder import LMEmbedder
+    return LMEmbedder(ARCHS["qwen3-0.6b"].reduced(), key=jax.random.key(0))
+
+
+def test_fused_embed_join_bit_identical_to_host_roundtrip(embedder):
+    """Satellite acceptance: embedding inside the join scan must emit the
+    exact same pairs, scores, and masks as embedding on the host and
+    pushing vectors — bit-identical, same pooled-embed function either
+    way."""
+    from repro.runtime import FusedEmbedder
+
+    S, n = 32, 56
+    rng = np.random.default_rng(7)
+    toks = rng.integers(1, 500, (n, S)).astype(np.int32)
+    tenants = rng.integers(0, 3, n)
+    # plant near-duplicates within tenant 1
+    plant = np.where(tenants == 1)[0][:4]
+    for i in plant[1:]:
+        toks[i] = toks[plant[0]]
+    ts = np.cumsum(rng.exponential(0.05, n))
+
+    table = TenantTable([0.9, 0.85, 0.9], [0.1, 0.05, 0.1])
+    cfg = _cfg(capacity=256, micro_batch=16, block_q=16, block_w=16,
+               chunk_d=64)
+    fused = FusedEmbedder(embedder.cfg, embedder.params, S)
+    rt_f = MultiTenantRuntime(cfg, table, span=2, fused=fused)
+    rt_h = MultiTenantRuntime(cfg, table, span=2)
+    for i in range(n):
+        k = int(tenants[i])
+        uf = rt_f.submit(k, toks[i:i + 1], ts[i:i + 1])
+        uh = rt_h.submit(k, embedder(toks[i:i + 1]), ts[i:i + 1])
+        assert uf.tolist() == uh.tolist()
+    rt_f.flush(final=True)
+    rt_h.flush(final=True)
+    fa, fb, fs, fm = rt_f.drain_arrays(return_masks=True)
+    ha, hb, hs, hm = rt_h.drain_arrays(return_masks=True)
+    assert fa.size > 0                       # the planted dups did emit
+    np.testing.assert_array_equal(fa, ha)
+    np.testing.assert_array_equal(fb, hb)
+    np.testing.assert_array_equal(fs, hs)    # bit-identical scores
+    np.testing.assert_array_equal(fm, hm)
+
+
+def test_fused_embedder_validation(embedder):
+    from repro.runtime import FusedEmbedder
+
+    table = TenantTable.uniform(2, 0.9, 0.1)
+    with pytest.raises(ValueError):          # d_model (64) != cfg.d (32)
+        MultiTenantRuntime(
+            _cfg(d=32), table, fused=FusedEmbedder(embedder.cfg, embedder.params, 16)
+        )
+    rt = MultiTenantRuntime(
+        _cfg(capacity=256, micro_batch=16, block_q=16),
+        table, fused=FusedEmbedder(embedder.cfg, embedder.params, 16),
+    )
+    with pytest.raises(ValueError):          # wrong token width
+        rt.submit(0, np.zeros((2, 8), np.int32), np.zeros(2))
+
+
+# --------------------------------------------------------------------- #
+# multi-tenant service: namespaced union-find, per-tenant groups
+# --------------------------------------------------------------------- #
+def test_multi_tenant_service_namespaced_groups():
+    from repro.serving import MultiTenantSSSJService
+
+    rng = np.random.default_rng(11)
+    table = TenantTable([0.9, 0.9, 0.95], [0.05, 0.05, 0.02])
+    svc = MultiTenantSSSJService(table, dim=32, capacity=256, micro_batch=16)
+    base = rng.standard_normal(32).astype(np.float32)
+    t = 0.0
+    for _ in range(4):
+        for k in range(3):
+            b = rng.standard_normal((4, 32)).astype(np.float32)
+            b[0] = base + 0.01 * rng.standard_normal(32)
+            local = svc.submit(k, b, t + np.arange(4) * 0.01)
+            assert local.tolist() == list(range(local[0], local[0] + 4))
+        t += 0.2
+    svc.flush(final=True)
+    for k in range(3):
+        groups = svc.duplicate_groups(k)
+        # each tenant groups its own planted copies, under LOCAL uids —
+        # identical group structure across tenants, no cross-tenant merge
+        assert groups == [[0, 4, 8, 12]], f"tenant {k}"
+        assert svc.trending(k, min_size=4) == [[0, 4, 8, 12]]
+        assert svc.tenant_stats(k)["submitted"] == 16
