@@ -26,24 +26,60 @@ Claims checked (ISSUE 3 acceptance):
 
 Results are written machine-readably to ``BENCH_runtime.json``.
 
+``--shards P`` additionally runs the coalesced driver with the runtime on
+``ShardedFacade`` over P in-process shards (forcing
+``--xla_force_host_platform_device_count`` before jax initializes — the
+host-platform device-count trick) and enforces that the sharded per-tenant
+pair sets are identical to the single-device ones (DESIGN.md §10).
+
 Standalone usage (CI smoke runs this):
 
     PYTHONPATH=src python -m benchmarks.runtime_throughput --smoke
+    PYTHONPATH=src python -m benchmarks.runtime_throughput --smoke --shards 2
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 from typing import List
+
+# host-platform device-count trick: must land in the environment BEFORE
+# jax initializes (which the repro imports below trigger), so sniff argv
+# here rather than waiting for argparse (both --shards N and --shards=N;
+# malformed values are left for argparse to reject properly)
+def _sniff_shards(argv) -> int:
+    for i, a in enumerate(argv):
+        v = None
+        if a == "--shards" and i + 1 < len(argv):
+            v = argv[i + 1]
+        elif a.startswith("--shards="):
+            v = a.split("=", 1)[1]
+        if v is not None:
+            try:
+                return int(v)
+            except ValueError:
+                return 1
+    return 1
+
+
+_n = _sniff_shards(sys.argv)
+if _n > 1 and "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n}"
+    ).strip()
 
 import numpy as np
 
 from repro.data.synth import dense_embedding_stream
 from repro.engine import EngineConfig
-from repro.runtime import MultiTenantRuntime, TenantTable
+from repro.runtime import MultiTenantRuntime, ShardedFacade, TenantTable
 
 from .common import Row
 
@@ -69,9 +105,9 @@ def _traffic(n_tenants, rounds, per_round, d, seed=0):
     return events
 
 
-def _run(events, cfg, table, span, coalesce: bool):
+def _run(events, cfg, table, span, coalesce: bool, engine=None):
     rt = MultiTenantRuntime(cfg, table, span=span,
-                            max_queue_per_tenant=1 << 20)
+                            max_queue_per_tenant=1 << 20, engine=engine)
     t0 = time.perf_counter()
     last_round_start = 0
     for i, (k, vecs, ts) in enumerate(events):
@@ -91,7 +127,7 @@ def _run(events, cfg, table, span, coalesce: bool):
     return rt, elapsed, pairs_per_tenant
 
 
-def run(fast: bool = True, smoke: bool = False) -> List[Row]:
+def run(fast: bool = True, smoke: bool = False, shards: int = 1) -> List[Row]:
     rows: List[Row] = []
     if smoke:
         n_tenants, rounds, per_round, d, mb, cap = 8, 4, 4, 32, 32, 512
@@ -104,6 +140,7 @@ def run(fast: bool = True, smoke: bool = False) -> List[Row]:
     rows.append(Row("runtime/smoke_mode", float(smoke)))
     rows.append(Row("runtime/n_tenants", float(n_tenants)))
     rows.append(Row("runtime/items_per_submit", float(per_round)))
+    rows.append(Row("runtime/shards", float(shards)))
 
     table = TenantTable.uniform(n_tenants, theta, lam)
     cfg = EngineConfig(
@@ -145,6 +182,41 @@ def run(fast: bool = True, smoke: bool = False) -> List[Row]:
                     float(rt_c.overflow + rt_s.overflow)))
     rows.append(Row("runtime/queue_delay_mean_s", sc["queue_delay_mean_s"],
                     "coalesced admission → dispatch"))
+
+    if shards > 1:
+        # multi-tenant × sharded (DESIGN.md §10): same coalesced traffic,
+        # runtime on ShardedFacade over P in-process shards — identical
+        # per-tenant pair sets are a hard claim, throughput is informative
+        import jax
+
+        if jax.device_count() < shards:
+            raise RuntimeError(
+                f"--shards {shards} needs ≥{shards} devices; found "
+                f"{jax.device_count()} (XLA_FLAGS device-count trick "
+                f"not applied?)"
+            )
+        mesh = jax.make_mesh((shards,), ("data",))
+        scfg = EngineConfig(
+            theta=theta, lam=lam, capacity=cap // shards, d=d,
+            micro_batch=mb, max_pairs=4096, tile_k=mb * mb, block_q=mb,
+            block_w=mb, chunk_d=min(d, 128),
+        )
+        _run(warm, scfg, table, span, True, engine=ShardedFacade(mesh))
+        rt_sh, t_sh, pairs_sh = _run(
+            events, scfg, table, span, True, engine=ShardedFacade(mesh)
+        )
+        rows.append(Row("runtime/sharded/pair_sets_match_single",
+                        float(pairs_sh == pairs_c), f"{shards} shards"))
+        rows.append(Row("runtime/sharded/items_per_s", n_items / t_sh,
+                        f"{t_sh*1e3:.0f} ms, {shards} host shards"))
+        rows.append(Row("runtime/sharded/pairs_dropped",
+                        float(rt_sh.pairs_dropped)))
+        rows.append(Row("runtime/sharded/window_overflow",
+                        float(rt_sh.overflow)))
+        ssh = rt_sh.stats()
+        rows.append(Row("runtime/sharded/live_slots_max",
+                        float(max(ssh["shards"]["live_slots"])),
+                        "per-shard ring liveness"))
     return rows
 
 
@@ -170,6 +242,16 @@ def check(rows: List[Row]) -> List[str]:
             "coalescing under the claimed 3× vs sequential per-tenant "
             f"pushes ({by.get('runtime/coalescing_speedup_x'):.2f}×)"
         )
+    if by.get("runtime/shards", 1.0) > 1.0:
+        if by.get("runtime/sharded/pair_sets_match_single") != 1.0:
+            problems.append(
+                "sharded runtime emitted different per-tenant pairs than "
+                "the single-device runtime"
+            )
+        if by.get("runtime/sharded/pairs_dropped", 0.0) != 0.0:
+            problems.append("sharded emission overflowed on benchmark traffic")
+        if by.get("runtime/sharded/window_overflow", 0.0) != 0.0:
+            problems.append("sharded ring window overflowed on benchmark traffic")
     return problems
 
 
@@ -179,11 +261,15 @@ def main() -> None:
                     help="tiny shapes (CI): exercises both drivers, relaxes "
                          "the wall-clock claim")
     ap.add_argument("--full", action="store_true", help="longer streams")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="also run the coalesced driver on ShardedFacade "
+                         "over this many in-process shards (forces host "
+                         "platform devices before jax init)")
     ap.add_argument("--json", default=JSON_PATH,
                     help=f"machine-readable output path (default {JSON_PATH})")
     args = ap.parse_args()
     t0 = time.time()
-    rows = run(fast=not args.full, smoke=args.smoke)
+    rows = run(fast=not args.full, smoke=args.smoke, shards=args.shards)
     print("name,value,extra")
     for r in rows:
         print(r.csv())
@@ -191,6 +277,7 @@ def main() -> None:
     payload = {
         "benchmark": "runtime_throughput",
         "mode": "smoke" if args.smoke else ("fast" if not args.full else "full"),
+        "shards": args.shards,
         "elapsed_s": round(time.time() - t0, 3),
         "rows": [dict(name=r.name, value=r.value, extra=r.extra) for r in rows],
         "problems": problems,

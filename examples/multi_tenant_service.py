@@ -7,13 +7,28 @@ stream-tagged device engine (DESIGN.md §9): cross-tenant pairs are masked
 on device, per-tenant (θ, λ) rides a small device table, and the service
 groups near-duplicates under namespaced (tenant, uid) keys.
 
+The same traffic then replays on the **sharded** variant (DESIGN.md §10):
+the identical service facade over ``ShardedFacade`` spreads the ring
+window across P in-process shards (host-platform device-count trick) and
+must produce the identical per-tenant groups.
+
     PYTHONPATH=src python examples/multi_tenant_service.py
 """
 
-import numpy as np
+import os
 
-from repro.runtime import TenantTable
-from repro.serving import MultiTenantSSSJService
+N_SHARDS = 2
+# the device-count trick must land before jax initializes (first repro import)
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={N_SHARDS}"
+    ).strip()
+
+import numpy as np  # noqa: E402
+
+from repro.runtime import TenantTable  # noqa: E402
+from repro.serving import MultiTenantSSSJService  # noqa: E402
 
 rng = np.random.default_rng(0)
 K, DIM, ROUNDS, PER_SUBMIT = 8, 64, 12, 3
@@ -23,20 +38,31 @@ table = TenantTable(
     thetas=[0.95, 0.9, 0.85, 0.9, 0.95, 0.8, 0.9, 0.85],
     lams=[0.2, 0.05, 0.1, 0.02, 0.5, 0.05, 0.1, 0.2],
 )
-svc = MultiTenantSSSJService(table, dim=DIM, capacity=1024, micro_batch=32)
 
 # every tenant periodically re-posts a noisy copy of its own base document
 bases = rng.standard_normal((K, DIM)).astype(np.float32)
+traffic = []                       # (tenant, docs, timestamps), replayable
 t = 0.0
 for r in range(ROUNDS):
     for k in range(K):
         docs = rng.standard_normal((PER_SUBMIT, DIM)).astype(np.float32)
         docs[0] = bases[k] + 0.01 * rng.standard_normal(DIM)
-        svc.submit(k, docs, t + np.arange(PER_SUBMIT) * 1e-3)
+        traffic.append((k, docs, t + np.arange(PER_SUBMIT) * 1e-3))
         t += 0.01
-    svc.flush(final=False)          # coalesce: full micro-batches only
-svc.flush(final=True)
 
+
+def drive(svc):
+    per_round = 0
+    for k, docs, ts in traffic:
+        svc.submit(k, docs, ts)
+        per_round += 1
+        if per_round % K == 0:
+            svc.flush(final=False)  # coalesce: full micro-batches only
+    svc.flush(final=True)
+    return svc
+
+
+svc = drive(MultiTenantSSSJService(table, dim=DIM, capacity=1024, micro_batch=32))
 stats = svc.stats()
 assert stats["n_items"] == K * ROUNDS * PER_SUBMIT
 assert stats["pairs_dropped"] == 0
@@ -49,3 +75,18 @@ print(f"✓ {K} tenants, {stats['n_items']} documents on one engine; "
       f"padding waste {stats['padding_waste']:.1%}, "
       f"{stats['spans_dispatched']} device dispatches, "
       f"per-tenant groups e.g. tenant 0 → {svc.duplicate_groups(0)[:1]}")
+
+# ---- sharded variant: same service, ring window over N_SHARDS shards ---- #
+import jax  # noqa: E402
+
+mesh = jax.make_mesh((N_SHARDS,), ("data",))
+svc_sh = drive(MultiTenantSSSJService(
+    table, dim=DIM, capacity=1024, micro_batch=32, mesh=mesh,
+))
+sh = svc_sh.stats()
+assert sh["pairs_dropped"] == 0 and sh["n_shards"] == N_SHARDS
+for k in range(K):
+    assert svc_sh.duplicate_groups(k) == svc.duplicate_groups(k), k
+print(f"✓ sharded: identical per-tenant groups over {N_SHARDS} shards "
+      f"(per-shard live slots {sh['shards']['live_slots']}, "
+      f"per-shard pairs {sh['shards']['pairs_emitted']})")

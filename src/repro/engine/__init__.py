@@ -26,6 +26,8 @@ from .sharded import (  # noqa: F401
     ShardedStreamEngine,
     init_sharded_window,
     make_sharded_batch_step,
+    shard_stats,
+    window_axis,
 )
 from .window import (  # noqa: F401
     WindowState,

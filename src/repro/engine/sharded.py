@@ -27,11 +27,25 @@ the engine's shared scan body — :func:`repro.engine.engine.make_micro_step`):
     so each shard's ring ages uniformly and eviction stays time-ordered
     per shard.
 
+Multi-tenant composition (DESIGN.md §10): with a
+:class:`~repro.runtime.tenants.TenantTable`, the scan inputs gain the
+``sqs`` stream-id lane, every ring shard carries its slice of the
+``sids`` lane (``WindowState.sids``, dealt round-robin with the vectors),
+and the per-tenant ``(θ_k, λ_k)`` tables ride the ``shard_map`` in_specs
+**replicated** — each shard looks its query rows' parameters up locally,
+and because queries are replicated, every shard derives the *same*
+unpadded ``(min θ, min λ)`` pruning scalars, so the bounds stay admissible
+shard-for-shard (ops.py contract).  The stream-equality mask is folded
+into the join on every shard by the level-1 impls themselves; nothing
+about the three-level merge or the global ``max_pairs`` budget changes.
+
 Every drop stays attributed to its level: ``tile_k`` overflow accumulates
 in-scan (``dropped_tile``), ``shard_k`` overflow accumulates in-scan
-(``dropped``), and global-merge losses are folded into ``dropped`` (with
-the in-scan ``pairs`` counter corrected down) after the gather, so
-``pairs_emitted`` always equals what the drain actually delivers.
+(``dropped``), and global-merge losses accumulate after the gather in a
+**dedicated telemetry lane** (lane ``n_shards``; the ``pairs`` counter is
+corrected down there too), so ``pairs_emitted`` always equals what the
+drain actually delivers while lanes ``0..n_shards-1`` stay honest
+per-shard counters (:func:`shard_stats`).
 """
 
 from __future__ import annotations
@@ -41,6 +55,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..distributed.sharding import AxisRules, DEFAULT_RULES, shard_map
@@ -54,10 +69,17 @@ from .engine import (
 )
 from .window import WindowState, init_window, push_with_overflow
 
-__all__ = ["ShardedStreamEngine", "init_sharded_window", "make_sharded_batch_step"]
+__all__ = [
+    "ShardedStreamEngine",
+    "init_sharded_window",
+    "make_sharded_batch_step",
+    "shard_stats",
+    "window_axis",
+]
 
 
-def _window_axis(mesh: Mesh, rules: AxisRules) -> str:
+def window_axis(mesh: Mesh, rules: AxisRules = DEFAULT_RULES) -> str:
+    """Mesh axis the logical ``"window"`` axis resolves to under ``rules``."""
     axes = rules.lookup("window")
     if isinstance(axes, str):
         axes = (axes,)
@@ -70,7 +92,12 @@ def _window_axis(mesh: Mesh, rules: AxisRules) -> str:
 
 
 def init_sharded_window(cfg: EngineConfig, mesh: Mesh, axis: str) -> WindowState:
-    """Global window of ``cfg.capacity`` per-shard slots × axis size."""
+    """Global window of ``cfg.capacity`` per-shard slots × axis size.
+
+    The ``sids`` stream-id lane is always materialized (sharded like
+    ``uids``) so the same state pytree serves both the single-tenant
+    engine and the multi-tenant runtime's sharded path.
+    """
     n = mesh.shape[axis]
     state = init_window(cfg.capacity * n, cfg.d)
     shard = NamedSharding(mesh, P(axis))
@@ -80,14 +107,25 @@ def init_sharded_window(cfg: EngineConfig, mesh: Mesh, axis: str) -> WindowState
         uids=jax.device_put(state.uids, shard),
         cursor=jax.device_put(jnp.zeros((n,), jnp.int32), shard),
         overflow=jax.device_put(jnp.zeros((n,), jnp.int32), shard),
+        sids=jax.device_put(state.sids, shard),
     )
 
 
-def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
+def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None):
     """Jitted shard_map step with the same signature as
     :func:`repro.engine.engine.make_batch_step`: per-shard buffers are
     merged into one global ``(max_pairs,)`` buffer per micro-batch and
-    masks are OR-reduced over shards before anything reaches the host."""
+    masks are OR-reduced over shards before anything reaches the host.
+
+    With a :class:`~repro.runtime.tenants.TenantTable` the signature
+    mirrors :func:`repro.runtime.runtime.make_tenant_batch_step` instead —
+    ``(state, telem, qs, tqs, uqs, sqs, nvs)`` — and the step becomes
+    stream-tagged: the ``sqs`` lane is dealt into each shard's ``sids``
+    ring lane, the stream-equality mask rides the level-1 join on every
+    shard, and per-query-row ``(theta_q, lam_q)`` are looked up inside the
+    ``shard_map`` from the table's device arrays (broadcast replicated
+    through the in_specs).
+    """
 
     if cfg.emit_dense:
         raise ValueError(
@@ -97,7 +135,9 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
     p = mesh.shape[axis]
     if cfg.micro_batch % p != 0:
         raise ValueError(f"micro_batch {cfg.micro_batch} not divisible by {p} shards")
-    tau = cfg.tau
+    multi = table is not None
+    tau = table.tau_max if multi else cfg.tau
+    per_row = multi and not table.is_uniform
     bl = cfg.micro_batch // p         # arrivals per shard per micro-batch
     shard_k = cfg.shard_k or cfg.max_pairs
     # level-2 (per-shard) merge capacity: the in-scan micro step merges this
@@ -105,15 +145,16 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
     # after the gather
     local_cfg = dataclasses.replace(cfg, max_pairs=shard_k)
 
-    def local_batch(state, telem, qs, tqs, uqs, nvs):
+    def local_core(state, telem, xs, th_t, lm_t):
         me = jax.lax.axis_index(axis)
 
-        def ingest(st, q, tq, uq, n_valid, t_max):
+        def ingest(st, q, tq, uq, n_valid, t_max, sq=None):
             # round-robin deal: this shard ingests items me, me+p, me+2p, …
             idx = me + p * jnp.arange(bl, dtype=jnp.int32)
             n_valid_l = jnp.sum((idx < n_valid).astype(jnp.int32))
             return push_with_overflow(
-                st, q[idx], tq[idx], uq[idx], n_valid_l, t_max, tau
+                st, q[idx], tq[idx], uq[idx], n_valid_l, t_max, tau,
+                sq=None if sq is None else sq[idx],
             )
 
         # replicated inputs ⇒ every shard computes the same self candidates;
@@ -124,12 +165,23 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
             keep = (me == 0).astype(jnp.int32)
             return c._replace(kept=c.kept * keep, emitted=c.emitted * keep)
 
-        micro = make_micro_step(local_cfg, ingest, self_mask=self_mask)
+        lookup = None
+        if multi:
+            def lookup(sq):
+                # replicated queries ⇒ identical per-row lanes (and identical
+                # unpadded min-θ/min-λ pruning scalars) on every shard
+                if not per_row:
+                    return None
+                return table.lookup_rows(th_t, lm_t, sq)
+
+        micro = make_micro_step(
+            local_cfg, ingest, self_mask=self_mask, tenant_lookup=lookup
+        )
 
         # per-shard scalars travel as (1,) slices of the P(axis) arrays
         sub = state._replace(cursor=state.cursor[0], overflow=state.overflow[0])
         tl = jax.tree.map(lambda x: x[0], telem)
-        (sub, tl), (bufs, masks) = jax.lax.scan(micro, (sub, tl), (qs, tqs, uqs, nvs))
+        (sub, tl), (bufs, masks) = jax.lax.scan(micro, (sub, tl), xs)
         state = sub._replace(cursor=sub.cursor[None], overflow=sub.overflow[None])
         telem = jax.tree.map(lambda x: x[None], tl)
         # scalar leaves come out of the scan as (n_micro,); give them a
@@ -142,9 +194,20 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
         )
         return state, telem, bufs, masks[:, None, :]
 
+    if multi:
+        def local_batch(state, telem, qs, tqs, uqs, sqs, th_t, lm_t, nvs):
+            return local_core(
+                state, telem, (qs, tqs, uqs, sqs, nvs), th_t, lm_t
+            )
+        n_bcast = 7   # qs, tqs, uqs, sqs, th_t, lm_t, nvs — all replicated
+    else:
+        def local_batch(state, telem, qs, tqs, uqs, nvs):
+            return local_core(state, telem, (qs, tqs, uqs, nvs), None, None)
+        n_bcast = 4
+
     state_specs = WindowState(
         vecs=P(axis, None), ts=P(axis), uids=P(axis),
-        cursor=P(axis), overflow=P(axis),
+        cursor=P(axis), overflow=P(axis), sids=P(axis),
     )
     telem_specs = EngineTelemetry(*(P(axis) for _ in EngineTelemetry._fields))
     buf_specs = PairBuffer(
@@ -155,7 +218,7 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
     fn = shard_map(
         local_batch,
         mesh=mesh,
-        in_specs=(state_specs, telem_specs, P(), P(), P(), P()),
+        in_specs=(state_specs, telem_specs) + (P(),) * n_bcast,
         out_specs=(state_specs, telem_specs, buf_specs, P(None, axis, None)),
         check_vma=False,
     )
@@ -171,21 +234,80 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str):
         )
         return merge_candidates(cands, max_pairs=cfg.max_pairs)
 
-    def batch_step(state, telem, qs, tqs, uqs, nvs):
-        state, telem, bufs, masks = fn(state, telem, qs, tqs, uqs, nvs)
+    def finish(state, tout, extra, bufs, masks):
         gbufs = jax.vmap(shard_merge)(
             bufs.uid_a, bufs.uid_b, bufs.score, bufs.n_pairs
         )
         # the in-scan `pairs` counter summed per-shard survivors; pairs that
-        # just fell to the global budget move to `dropped`
+        # just fell to the global budget move to `dropped`.  The correction
+        # lives in the dedicated lane n (not any shard's lane), so per-shard
+        # counters stay honest while the lane sums keep the global
+        # invariant pairs_emitted == what the drain delivers
         merge_drops = jnp.sum(gbufs.n_dropped)
-        telem = telem._replace(
-            pairs=telem.pairs.at[0].add(-merge_drops),
-            dropped=telem.dropped.at[0].add(merge_drops),
+        extra = extra._replace(
+            pairs=extra.pairs.at[0].add(-merge_drops),
+            dropped=extra.dropped.at[0].add(merge_drops),
+        )
+        telem = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b]), tout, extra
         )
         return state, telem, gbufs, jnp.any(masks, axis=1)
 
-    return jax.jit(batch_step, donate_argnums=(0, 1))
+    def split_lanes(telem):
+        # lanes 0..p-1 ride the shard_map (one per shard); lane p carries
+        # the global-merge correction and stays on the host side of it
+        tin = jax.tree.map(lambda x: x[:p], telem)
+        extra = jax.tree.map(lambda x: x[p:], telem)
+        return tin, extra
+
+    if multi:
+        th_d, lm_d = table.device_tables
+
+        def batch_step(state, telem, qs, tqs, uqs, sqs, nvs):
+            tin, extra = split_lanes(telem)
+            state, tout, bufs, masks = fn(
+                state, tin, qs, tqs, uqs, sqs, th_d, lm_d, nvs
+            )
+            return finish(state, tout, extra, bufs, masks)
+    else:
+        def batch_step(state, telem, qs, tqs, uqs, nvs):
+            tin, extra = split_lanes(telem)
+            state, tout, bufs, masks = fn(state, tin, qs, tqs, uqs, nvs)
+            return finish(state, tout, extra, bufs, masks)
+
+    return jax.jit(batch_step, donate_argnums=(0,))
+
+
+def shard_stats(state: WindowState, telem: EngineTelemetry, n_shards: int) -> dict:
+    """Per-shard liveness and drop surface, keyed like the single-device
+    :meth:`~repro.engine.engine.StreamEngineBase.stats` counters so
+    operators (and the multi-tenant runtime) read one vocabulary on both
+    paths instead of silently missing the per-shard breakdown.
+
+    Telemetry lanes ``0..n_shards-1`` are the in-scan per-shard counters;
+    lane ``n_shards`` holds the global-merge correction (see
+    :func:`make_sharded_batch_step`), surfaced as
+    ``pairs_dropped_global`` rather than mis-charged to any shard — so
+    per-shard ``pairs_emitted`` counts that shard's merge survivors
+    *before* the global budget and is never negative."""
+    n = n_shards
+    uids = np.asarray(state.uids).reshape(n, -1)
+    pairs = np.asarray(telem.pairs).reshape(-1)
+    dropped = np.asarray(telem.dropped).reshape(-1)
+    return {
+        "n_shards": n,
+        "pairs_dropped_global": int(dropped[n:].sum()),
+        "shards": {
+            "live_slots": (uids >= 0).sum(axis=1).tolist(),
+            "cursor": np.asarray(state.cursor).reshape(-1).tolist(),
+            "window_overflow": np.asarray(state.overflow).reshape(-1).tolist(),
+            "pairs_emitted": pairs[:n].tolist(),
+            "pairs_dropped_budget": dropped[:n].tolist(),
+            "pairs_dropped_tile": (
+                np.asarray(telem.dropped_tile).reshape(-1)[:n].tolist()
+            ),
+        },
+    }
 
 
 class ShardedStreamEngine(StreamEngineBase):
@@ -207,10 +329,11 @@ class ShardedStreamEngine(StreamEngineBase):
     ) -> None:
         super().__init__(cfg)
         self.mesh = mesh
-        self.axis = axis or _window_axis(mesh, rules)
+        self.axis = axis or window_axis(mesh, rules)
         self.n_shards = mesh.shape[self.axis]
         self.state = init_sharded_window(cfg, mesh, self.axis)
-        n = self.n_shards
+        # lanes 0..n-1 per shard + lane n for the global-merge correction
+        n = self.n_shards + 1
         self.telem = jax.tree.map(
             lambda x: jnp.zeros((n,), x.dtype), init_telemetry()
         )
@@ -220,4 +343,7 @@ class ShardedStreamEngine(StreamEngineBase):
         return self.cfg.capacity * self.n_shards
 
     def stats(self) -> dict:
-        return {**super().stats(), "n_shards": self.n_shards}
+        return {
+            **super().stats(),
+            **shard_stats(self.state, self.telem, self.n_shards),
+        }

@@ -292,7 +292,12 @@ def sssj_join_candidates(
         lam_q = lam_q.reshape(-1).astype(jnp.float32)
     # pruning scalars must come from the UNPADDED per-row tables: row
     # padding below uses inert fills (θ=2 can never emit, λ=0 never decays)
-    # which would otherwise loosen the min-based strip/tile bounds
+    # which would otherwise loosen the min-based strip/tile bounds.  Under
+    # the sharded engine this call runs inside shard_map with q/theta_q/
+    # lam_q REPLICATED and only w/sw sharded — every shard therefore
+    # derives the same (min θ, min λ) over the same rows, and a strip
+    # skipped on one shard is skipped because it is provably below every
+    # row's threshold, exactly as on a single device (DESIGN.md §10)
     th_min = theta if theta_q is None else jnp.min(theta_q)
     lam_min = lam if lam_q is None else jnp.min(lam_q)
 

@@ -17,8 +17,11 @@ from .router import (  # noqa: F401
     TenantBackpressure,
 )
 from .runtime import (  # noqa: F401
+    EngineFacade,
     FusedEmbedder,
     MultiTenantRuntime,
+    ShardedFacade,
+    SingleDeviceFacade,
     make_tenant_batch_step,
 )
 from .tenants import TenantTable  # noqa: F401

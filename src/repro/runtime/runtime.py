@@ -1,9 +1,14 @@
-"""Multi-tenant streaming runtime: K logical streams on one device engine.
+"""Multi-tenant streaming runtime: K logical streams on one engine.
 
 The engine (DESIGN.md §4) assumes one logical stream whose arrival rate
 fills 128-row micro-batches.  The ROADMAP's serving target is the
 opposite shape: thousands of small independent streams, each too slow to
-fill a micro-batch alone.  This runtime multiplexes them (DESIGN.md §9):
+fill a micro-batch alone.  This runtime multiplexes them (DESIGN.md §9),
+onto either the single-device engine or the sharded fan-out — the
+:class:`EngineFacade` seam (construct, step, drain, stats) keeps the
+runtime engine-agnostic, and :class:`ShardedFacade` composes the whole
+multi-tenant machinery with :mod:`repro.engine.sharded`'s per-device ring
+shards (DESIGN.md §10):
 
   * **stream-tagged state** — every ring slot and every drained pair
     carries a stream id; the join masks cross-stream pairs *on device*
@@ -46,13 +51,23 @@ from ..engine.engine import (
     init_telemetry,
     make_micro_step,
 )
+from ..distributed.sharding import DEFAULT_RULES
+from ..engine.sharded import (
+    init_sharded_window,
+    make_sharded_batch_step,
+    shard_stats,
+    window_axis,
+)
 from ..engine.window import init_window, push_with_overflow
 from .router import RequestRouter, TenantBackpressure
 from .tenants import TenantTable
 
 __all__ = [
+    "EngineFacade",
     "FusedEmbedder",
     "MultiTenantRuntime",
+    "ShardedFacade",
+    "SingleDeviceFacade",
     "make_tenant_batch_step",
     "TenantBackpressure",
 ]
@@ -74,6 +89,106 @@ class FusedEmbedder:
     model_cfg: ModelConfig
     params: Any
     seq_len: int
+
+
+class EngineFacade:
+    """Construct/step/drain/stats seam between the runtime and an engine.
+
+    The runtime itself is engine-agnostic: it owns admission, coalescing,
+    uid→tenant attribution, and the host drain (inherited from
+    :class:`~repro.engine.engine.StreamEngineBase`, whose layout contract —
+    one merged :class:`~repro.kernels.sssj_join.PairBuffer` segment per
+    micro-batch plus an OR-reduced row mask — both engines satisfy).  A
+    facade supplies the four engine-specific pieces:
+
+      * **construct** — :meth:`init_state` / :meth:`init_telemetry` build
+        the window state (with the ``sids`` lane) and the telemetry carry;
+      * **step** — :meth:`make_step` builds the jitted stream-tagged batch
+        step ``(state, telem, qs, tqs, uqs, sqs, nvs) → (state, telem,
+        bufs, masks)``;
+      * **drain** — :meth:`global_capacity` sizes the dense-equivalent
+        traffic accounting the drain reports;
+      * **stats** — :meth:`stats_extra` surfaces engine-specific counters
+        (e.g. per-shard liveness) under the same keys both engines use.
+    """
+
+    def init_state(self, cfg: EngineConfig):
+        raise NotImplementedError
+
+    def init_telemetry(self, cfg: EngineConfig):
+        raise NotImplementedError
+
+    def make_step(
+        self,
+        cfg: EngineConfig,
+        table: TenantTable,
+        fused: Optional[FusedEmbedder],
+    ):
+        raise NotImplementedError
+
+    def global_capacity(self, cfg: EngineConfig) -> int:
+        raise NotImplementedError
+
+    def stats_extra(self, state, telem) -> dict:
+        return {}
+
+
+class SingleDeviceFacade(EngineFacade):
+    """Default facade: one ring window on one device."""
+
+    def init_state(self, cfg: EngineConfig):
+        return init_window(cfg.capacity, cfg.d)
+
+    def init_telemetry(self, cfg: EngineConfig):
+        return init_telemetry()
+
+    def make_step(self, cfg, table, fused):
+        return make_tenant_batch_step(cfg, table, fused)
+
+    def global_capacity(self, cfg: EngineConfig) -> int:
+        return cfg.capacity
+
+    def stats_extra(self, state, telem) -> dict:
+        return {}
+
+
+class ShardedFacade(EngineFacade):
+    """Sharded facade: one ring shard per device along the window axis.
+
+    ``cfg.capacity`` stays the *per-shard* ring size (global window =
+    ``capacity × n_shards``, same contract as
+    :class:`~repro.engine.sharded.ShardedStreamEngine`); ``cfg.max_pairs``
+    stays the global per-micro-batch budget.  ``cfg.micro_batch`` must be
+    divisible by the shard count (round-robin deal).  The fused
+    embed→join path is single-device only for now.
+    """
+
+    def __init__(self, mesh, rules=DEFAULT_RULES, axis: Optional[str] = None) -> None:
+        self.mesh = mesh
+        self.axis = axis or window_axis(mesh, rules)
+        self.n_shards = int(mesh.shape[self.axis])
+
+    def init_state(self, cfg: EngineConfig):
+        return init_sharded_window(cfg, self.mesh, self.axis)
+
+    def init_telemetry(self, cfg: EngineConfig):
+        # lanes 0..n-1 per shard + lane n for the global-merge correction
+        n = self.n_shards + 1
+        return jax.tree.map(lambda x: jnp.zeros((n,), x.dtype), init_telemetry())
+
+    def make_step(self, cfg, table, fused):
+        if fused is not None:
+            raise NotImplementedError(
+                "fused embed→join is single-device only; submit vectors "
+                "(or embed on the host) when running on ShardedFacade"
+            )
+        return make_sharded_batch_step(cfg, self.mesh, self.axis, table=table)
+
+    def global_capacity(self, cfg: EngineConfig) -> int:
+        return cfg.capacity * self.n_shards
+
+    def stats_extra(self, state, telem) -> dict:
+        return shard_stats(state, telem, self.n_shards)
 
 
 def make_tenant_batch_step(
@@ -131,6 +246,11 @@ def make_tenant_batch_step(
 class MultiTenantRuntime(StreamEngineBase):
     """K logical streams multiplexed onto one stream-tagged engine.
 
+    The engine is pluggable via ``engine=`` (an :class:`EngineFacade`;
+    default :class:`SingleDeviceFacade`, pass :class:`ShardedFacade(mesh)
+    <ShardedFacade>` to spread the ring window over a device mesh —
+    emissions are identical either way, DESIGN.md §10).
+
     ``submit(tenant, data, ts)`` admits a (possibly tiny) batch and
     returns its global uids; ``flush()`` coalesces everything queued into
     full micro-batches and dispatches them in fixed ``span``-sized scans
@@ -153,6 +273,7 @@ class MultiTenantRuntime(StreamEngineBase):
         span: int = 4,
         max_queue_per_tenant: int = 65536,
         fused: Optional[FusedEmbedder] = None,
+        engine: Optional[EngineFacade] = None,
     ) -> None:
         if cfg.emit_dense:
             raise ValueError("emit_dense is the single-tenant test oracle")
@@ -172,12 +293,13 @@ class MultiTenantRuntime(StreamEngineBase):
         self.table = table
         self.span = span
         self.fused = fused
+        self.engine = engine or SingleDeviceFacade()
         self.router = RequestRouter(
             table.n_tenants, max_queue_per_tenant=max_queue_per_tenant
         )
-        self.state = init_window(cfg.capacity, cfg.d)
-        self.telem = init_telemetry()
-        self._step = make_tenant_batch_step(cfg, table, fused)
+        self.state = self.engine.init_state(cfg)
+        self.telem = self.engine.init_telemetry(cfg)
+        self._step = self.engine.make_step(cfg, table, fused)
         # uid → tenant map: a doubling-growth append buffer (4 B per item
         # ever admitted — see ROADMAP on tenant-aware state)
         self._uid_tenant_buf = np.empty((1024,), np.int32)
@@ -395,11 +517,15 @@ class MultiTenantRuntime(StreamEngineBase):
             "pairs_drained": self.pairs_by_tenant[tenant],
         }
 
+    def _global_capacity(self) -> int:
+        return self.engine.global_capacity(self.cfg)
+
     def stats(self) -> dict:
         rt = self.router.telemetry
         disp = max(rt.items_dispatched, 1)
         return {
             **super().stats(),
+            **self.engine.stats_extra(self.state, self.telem),
             "n_tenants": self.table.n_tenants,
             "items_queued": len(self.router),
             "items_rejected": rt.items_rejected,

@@ -81,6 +81,13 @@ class TenantTable:
             for t, l in zip(self.thetas, self.lams)
         )
 
+    @property
+    def device_tables(self) -> Tuple[jax.Array, jax.Array]:
+        """Device-resident ``(thetas, lams)`` arrays — what the sharded
+        engine broadcasts (replicated) through its shard_map in_specs so
+        each shard can run :meth:`lookup_rows` locally."""
+        return self._theta_d, self._lam_d
+
     def spec(self, tenant: int) -> Tuple[float, float]:
         return float(self.thetas[tenant]), float(self.lams[tenant])
 
@@ -93,6 +100,22 @@ class TenantTable:
         return tenant
 
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def lookup_rows(
+        theta_d: jax.Array, lam_d: jax.Array, sq: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Row lookup from explicit device tables (traced).
+
+        The shard_map form of :meth:`lookup`: the sharded engine passes the
+        tables as replicated in_specs arguments instead of closure
+        constants, so the lookup stays explicit in the sharded jaxpr.  Pad
+        rows carry ``sq = -1``; the clip sends them to tenant 0, whose
+        finite values are inert — pad rows can never emit (uid = -1) and
+        never loosen the min-based pruning bounds.
+        """
+        idx = jnp.clip(sq.astype(jnp.int32), 0, theta_d.shape[0] - 1)
+        return theta_d[idx], lam_d[idx]
+
     def lookup(
         self, sq: jax.Array
     ) -> Optional[Tuple[jax.Array, jax.Array]]:
@@ -100,11 +123,7 @@ class TenantTable:
 
         Returns ``None`` for uniform tables so the join keeps its static
         scalars (identical results, one fewer lane through the kernel).
-        Pad rows carry ``sq = -1``; the clip sends them to tenant 0, whose
-        finite values are inert — pad rows can never emit (uid = -1) and
-        never loosen the min-based pruning bounds.
         """
         if self.is_uniform:
             return None
-        idx = jnp.clip(sq.astype(jnp.int32), 0, self.n_tenants - 1)
-        return self._theta_d[idx], self._lam_d[idx]
+        return self.lookup_rows(self._theta_d, self._lam_d, sq)

@@ -23,7 +23,12 @@ from typing import Callable, Dict, Hashable, List, Optional, Tuple
 import numpy as np
 
 from ..engine.engine import EngineConfig, StreamEngine
-from ..runtime import FusedEmbedder, MultiTenantRuntime, TenantTable
+from ..runtime import (
+    FusedEmbedder,
+    MultiTenantRuntime,
+    ShardedFacade,
+    TenantTable,
+)
 
 __all__ = [
     "SSSJService",
@@ -174,6 +179,11 @@ class MultiTenantSSSJService:
     host-side bug could never merge two tenants' groups.  Per-tenant
     ``(θ, λ)`` comes from the :class:`~repro.runtime.TenantTable`; vectors
     are unit-normalized here (or embedded on device via ``fused``).
+
+    Pass ``mesh`` to run the same service on the **sharded** engine
+    (DESIGN.md §10): ``capacity`` stays the *total* window size, split
+    evenly across the mesh's window-axis shards; emissions — and therefore
+    groups — are identical to the single-device run.
     """
 
     def __init__(
@@ -187,7 +197,27 @@ class MultiTenantSSSJService:
         span: int = 4,
         max_queue_per_tenant: int = 65536,
         fused: Optional[FusedEmbedder] = None,
+        mesh=None,
     ) -> None:
+        engine = None
+        if mesh is not None:
+            engine = ShardedFacade(mesh)
+            n = engine.n_shards
+            if capacity % n:
+                raise ValueError(
+                    f"capacity {capacity} not divisible by {n} window shards"
+                )
+            if micro_batch > capacity // n:
+                # EngineConfig validates rings per shard (its capacity is
+                # the per-shard size), so state the per-shard math here
+                # instead of surfacing a confusing downstream error
+                raise ValueError(
+                    f"micro_batch ({micro_batch}) exceeds the per-shard "
+                    f"window capacity ({capacity // n} = {capacity} total / "
+                    f"{n} shards); raise capacity to ≥ {micro_batch * n} "
+                    f"or lower micro_batch"
+                )
+            capacity //= n
         th0, lm0 = table.spec(0)
         cfg = EngineConfig(
             theta=th0, lam=lm0, capacity=capacity, d=dim,
@@ -199,6 +229,7 @@ class MultiTenantSSSJService:
         self.runtime = MultiTenantRuntime(
             cfg, table, span=span,
             max_queue_per_tenant=max_queue_per_tenant, fused=fused,
+            engine=engine,
         )
         self.table = table
         self.fused = fused

@@ -1,0 +1,332 @@
+"""Cross-impl conformance suite: every engine variant vs the dense oracle.
+
+One parametrized grid — engine ∈ {single, sharded×{2,4}} × level-1 impl ∈
+{pallas, scan, dense} × tenants ∈ {None, K=8} × ring {wrapped, unwrapped}
+× emission {lossless, overflow} — asserting the one contract every
+current and future engine variant must satisfy (DESIGN.md §8/§10):
+
+  * **exactness** — with no drop counter firing, the emitted pair set
+    equals the dense-oracle brute force pair-for-pair (per tenant on the
+    multi-tenant path), scores match the oracle's decayed similarities,
+    and every score clears its own tenant's θ;
+  * **overflow honesty** — under a tight ``max_pairs`` budget the
+    survivors are a subset of the truth and
+    ``survivors + pairs_dropped == truth`` with the per-level split
+    consistent (``dropped == dropped_budget + dropped_tile``);
+  * **liveness** — the ring (wrapped or not) never overwrote a live item
+    (``overflow == 0``), which is what makes the whole-stream brute force
+    a valid oracle;
+  * **invariance** — per-tenant emissions are identical across shard
+    counts (P ∈ {1, 2, 4}) and coalescing plans, because uids assign at
+    admission and the round-robin deal is uid-ordered.
+
+Sharded cells run in-process when the session already has enough devices
+(the CI multi-device leg forces 8 host devices) and fall back to a
+subprocess with ``--xla_force_host_platform_device_count`` otherwise, so
+the grid is enforced on the plain single-device tier-1 run too.
+
+This file is THE conformance gate: a new engine variant (new backend,
+new merge level, new tenancy mode) earns its place by adding a cell
+here, not by growing a bespoke test file.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.engine import EngineConfig, ShardedStreamEngine, StreamEngine
+from repro.runtime import MultiTenantRuntime, ShardedFacade, TenantTable
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_TESTS = os.path.dirname(os.path.abspath(__file__))
+
+D, MB = 32, 16
+K = 8
+# per-tenant (θ, λ): horizons are deliberately short (τ_max ≈ 1.2 time
+# units at global arrival rate ≈ K/unit ⇒ ~10 live items) so the wrapped
+# 64-slot ring never evicts a live item and the brute force stays exact
+THETAS = [0.8, 0.7, 0.9, 0.8, 0.75, 0.85, 0.8, 0.7]
+LAMS = [0.3, 0.5, 1.0, 0.4, 0.3, 0.6, 0.8, 0.5]
+N_PER = 24                 # items per tenant stream
+N_SINGLE = 192             # items in the single-tenant stream
+CAP_WRAPPED = 64           # total ring slots — wraps ~3× over the stream
+CAP_BIG = 256              # total ring slots — never wraps
+
+MODES = [
+    ("unwrapped", CAP_BIG, False),
+    ("wrapped", CAP_WRAPPED, False),
+    ("overflow", CAP_BIG, True),
+]
+
+
+def _cfg(impl: str, cap_total: int, overflow: bool, shards: int) -> EngineConfig:
+    return EngineConfig(
+        theta=0.8, lam=0.05, capacity=cap_total // shards, d=D,
+        micro_batch=MB, max_pairs=2 if overflow else 4096,
+        tile_k=MB * MB,            # block² — level 1 is lossless by design
+        block_q=MB, block_w=MB, chunk_d=32, join_impl=impl,
+    )
+
+
+def _dup_stream(n: int, seed: int, dup_frac: float = 0.35):
+    """A stream with near-duplicates planted at small Δt (dup chains
+    included), so pairs exist inside even the strictest tenant's horizon
+    and overflow cells reliably exceed a 2-pair budget."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0, n)
+    dup = rng.random(n) < dup_frac
+    dup[0] = False
+    gaps[dup] = 0.02 + 0.03 * rng.random(int(dup.sum()))
+    ts = np.cumsum(gaps)
+    v = rng.standard_normal((n, D))
+    for i in range(1, n):
+        if dup[i]:
+            v[i] = v[i - 1] + 0.03 * rng.standard_normal(D)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    return v.astype(np.float32), ts
+
+
+def _tenant_events():
+    """K interleaved tenant streams in one global admission order."""
+    streams = [_dup_stream(N_PER, 500 + k) for k in range(K)]
+    events = sorted(
+        (float(streams[k][1][i]), k, i)
+        for k in range(K) for i in range(N_PER)
+    )
+    return streams, events
+
+
+def _truth(vecs, ts, theta, lam, uid_of=None):
+    """Dense-oracle brute force: ``{(uid_lo, uid_hi): score}``."""
+    dec = (vecs @ vecs.T) * np.exp(-lam * np.abs(ts[:, None] - ts[None, :]))
+    out = {}
+    n = vecs.shape[0]
+    for i in range(n):
+        for j in range(i):
+            if dec[i, j] >= theta:
+                a, b = (i, j) if uid_of is None else (uid_of[i], uid_of[j])
+                out[(min(a, b), max(a, b))] = float(dec[i, j])
+    return out
+
+
+def _pair_scores(ua, ub, sc):
+    return {
+        (min(a, b), max(a, b)): s
+        for a, b, s in zip(ua.tolist(), ub.tolist(), sc.tolist())
+    }
+
+
+def _check(got: dict, truth: dict, stats: dict, overflow: bool, label):
+    """The conformance contract shared by every cell."""
+    assert truth, f"{label}: vacuous cell — no true pairs"
+    assert stats["window_overflow"] == 0, label
+    assert stats["pairs_dropped"] == (
+        stats["pairs_dropped_budget"] + stats["pairs_dropped_tile"]
+    ), label
+    assert got.keys() <= truth.keys(), (
+        label, sorted(got.keys() - truth.keys())[:5]
+    )
+    for k in got:
+        assert abs(got[k] - truth[k]) < 1e-5, (label, k)
+    if overflow:
+        assert stats["pairs_dropped"] > 0, label
+        assert len(got) + stats["pairs_dropped"] == len(truth), label
+    else:
+        assert stats["pairs_dropped"] == 0, label
+        assert got.keys() == truth.keys(), (
+            label, sorted(truth.keys() - got.keys())[:5]
+        )
+
+
+def _mesh(shards: int):
+    import jax
+
+    return jax.make_mesh((shards,), ("data",))
+
+
+def run_cell(impl: str, tenants, shards: int, mode: str) -> None:
+    """One conformance cell; raises AssertionError on contract violation."""
+    label = (impl, tenants, shards, mode)
+    cap_total, overflow = next(
+        (c, o) for m, c, o in MODES if m == mode
+    )
+    cfg = _cfg(impl, cap_total, overflow, shards)
+    if tenants is None:
+        vecs, ts = _dup_stream(N_SINGLE, seed=29, dup_frac=0.4)
+        truth = _truth(vecs, ts, cfg.theta, cfg.lam)
+        eng = (
+            StreamEngine(cfg) if shards == 1
+            else ShardedStreamEngine(cfg, _mesh(shards))
+        )
+        for i in range(0, N_SINGLE, 80):      # ragged pushes → padding path
+            eng.push(vecs[i:i + 80], ts[i:i + 80])
+        ua, ub, sc = eng.drain_arrays()
+        _check(_pair_scores(ua, ub, sc), truth, eng.stats(), overflow, label)
+        return
+
+    streams, events = _tenant_events()
+    table = TenantTable(THETAS, LAMS)
+    engine = None if shards == 1 else ShardedFacade(_mesh(shards))
+    rt = MultiTenantRuntime(cfg, table, span=2, engine=engine)
+    uid_maps = [dict() for _ in range(K)]
+    for _, k, i in events:
+        v, t = streams[k]
+        u = rt.submit(k, v[i:i + 1], t[i:i + 1])
+        uid_maps[k][i] = int(u[0])
+    rt.flush(final=True)
+    per = rt.drain_by_tenant()
+    stats = rt.stats()
+    got_all, truth_all = {}, {}
+    for k in range(K):
+        truth_k = _truth(*streams[k], THETAS[k], LAMS[k], uid_of=uid_maps[k])
+        got_k = _pair_scores(*per[k][:3])
+        # per-tenant: survivors ⊆ that tenant's truth with true scores,
+        # every score over that tenant's own θ (never a looser tenant's)
+        assert got_k.keys() <= truth_k.keys(), (label, k)
+        assert all(s >= THETAS[k] - 1e-6 for s in got_k.values()), (label, k)
+        got_all.update(got_k)
+        truth_all.update(truth_k)
+    _check(got_all, truth_all, stats, overflow, label)
+    if shards > 1:                 # tenant-aware per-shard stats surfaced
+        assert stats["n_shards"] == shards
+        # per-shard lanes count each shard's merge survivors BEFORE the
+        # global budget; the global-merge losses ride their own counter
+        assert all(p >= 0 for p in stats["shards"]["pairs_emitted"])
+        assert stats["pairs_dropped_global"] >= 0
+        assert (
+            sum(stats["shards"]["pairs_emitted"])
+            == stats["pairs_emitted"] + stats["pairs_dropped_global"]
+        )
+        assert sum(stats["shards"]["window_overflow"]) == 0
+
+
+def run_cells(impl: str, tenants, shards: int) -> None:
+    for mode, _, _ in MODES:
+        run_cell(impl, tenants, shards, mode)
+
+
+def _subprocess_cells(impl: str, tenants, shards: int) -> None:
+    code = (
+        f"import sys; sys.path.insert(0, {_TESTS!r})\n"
+        f"from test_conformance import run_cells\n"
+        f"run_cells({impl!r}, {tenants!r}, {shards})\n"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+IMPLS = ["pallas", "scan", "dense"]
+TENANTS = [None, K]
+
+
+@pytest.mark.parametrize("mode", [m for m, _, _ in MODES])
+@pytest.mark.parametrize("tenants", TENANTS, ids=["single-stream", f"K{K}"])
+@pytest.mark.parametrize("impl", IMPLS)
+def test_conformance_single_device(impl, tenants, mode):
+    run_cell(impl, tenants, 1, mode)
+
+
+@pytest.mark.parametrize("tenants", TENANTS, ids=["single-stream", f"K{K}"])
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("shards", [2, 4])
+def test_conformance_sharded(shards, impl, tenants):
+    """All three ring/overflow modes per (shards, impl, tenants) cell —
+    in-process when the session has enough devices (CI multi-device leg),
+    else in a subprocess with forced host devices."""
+    import jax
+
+    if jax.device_count() >= shards:
+        run_cells(impl, tenants, shards)
+    else:
+        _subprocess_cells(impl, tenants, shards)
+
+
+# --------------------------------------------------------------------- #
+# tentpole acceptance: per-tenant emissions invariant to BOTH coalescing
+# boundaries and shard count (round-robin deal is uid-ordered)
+# --------------------------------------------------------------------- #
+def run_invariance() -> None:
+    """Same traffic through P ∈ {1, 2, 4} × three coalescing plans: nine
+    runs, one per-tenant pair-score map, equal to the dense oracle."""
+    import jax
+
+    streams, events = _tenant_events()
+    table = TenantTable(THETAS, LAMS)
+
+    def run(shards, plan, flush_every):
+        scfg = _cfg("scan", CAP_BIG, False, shards)
+        engine = None if shards == 1 else ShardedFacade(_mesh(shards))
+        rt = MultiTenantRuntime(scfg, table, span=2, engine=engine)
+        uid_maps = [dict() for _ in range(K)]
+        i = p = n_flush = 0
+        while i < len(events):
+            chunk = events[i:i + plan[p % len(plan)]]
+            i += len(chunk)
+            p += 1
+            for _, k, j in chunk:
+                v, t = streams[k]
+                u = rt.submit(k, v[j:j + 1], t[j:j + 1])
+                uid_maps[k][j] = int(u[0])
+            n_flush += 1
+            if flush_every and n_flush % flush_every == 0:
+                rt.flush()
+        rt.flush(final=True)
+        per = rt.drain_by_tenant()
+        assert rt.pairs_dropped == 0 and rt.overflow == 0
+        return uid_maps, [_pair_scores(*per[k][:3]) for k in range(K)]
+
+    rng = np.random.default_rng(3)
+    plans = [([1], None), ([7], 3), (rng.integers(1, 23, 40).tolist(), 2)]
+    ref_maps, ref_sets = run(1, *plans[0])
+    truths = [
+        _truth(*streams[k], THETAS[k], LAMS[k], uid_of=ref_maps[k])
+        for k in range(K)
+    ]
+    for k in range(K):
+        assert ref_sets[k].keys() == truths[k].keys(), k
+    shard_counts = [p for p in (1, 2, 4) if jax.device_count() >= p]
+    assert shard_counts == [1] or len(shard_counts) == 3
+    for shards in shard_counts:
+        for plan, flush_every in plans:
+            maps, sets = run(shards, plan, flush_every)
+            # uid assignment is admission-order — identical across plans —
+            # so the pair maps must agree key-for-key, score-for-score
+            assert maps == ref_maps, (shards, plan[:5], flush_every)
+            for k in range(K):
+                assert sets[k].keys() == ref_sets[k].keys(), (shards, k)
+                for key in sets[k]:
+                    assert abs(sets[k][key] - ref_sets[k][key]) < 1e-6, (
+                        shards, k, key
+                    )
+    print(f"invariance ok over shards {shard_counts} × {len(plans)} plans")
+
+
+def test_emissions_invariant_to_shards_and_coalescing():
+    import jax
+
+    if jax.device_count() >= 4:
+        run_invariance()
+        return
+    code = (
+        f"import sys; sys.path.insert(0, {_TESTS!r})\n"
+        f"from test_conformance import run_invariance\n"
+        f"run_invariance()\n"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "invariance ok" in r.stdout

@@ -5,10 +5,17 @@ backpressure, config validation, and the fused embed→join path."""
 import numpy as np
 import pytest
 
+try:  # optional dev dependency: richer search when present, fixed sweep not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 from repro.data.synth import dense_embedding_stream, planted_duplicates
 from repro.engine import EngineConfig
 from repro.runtime import (
     MultiTenantRuntime,
+    RequestRouter,
     TenantBackpressure,
     TenantTable,
 )
@@ -204,6 +211,127 @@ def test_match_masks_ride_per_tenant():
         newer = {max(a, b) for a, b in truths[k]}
         want = np.array([u in newer for u in order])
         np.testing.assert_array_equal(mask, want, err_msg=f"tenant {k}")
+
+
+# --------------------------------------------------------------------- #
+# property-based router contracts (hypothesis when present, fixed sweep
+# otherwise — same pattern as test_compaction.py)
+# --------------------------------------------------------------------- #
+def _check_router_schedule(seed, n_tenants, cap):
+    """Arbitrary admit/take schedule vs a shadow FIFO model: admission
+    order is the only order, backpressure is all-or-nothing, and the
+    accounting identities hold after every operation."""
+    rng = np.random.default_rng(seed)
+    router = RequestRouter(n_tenants, max_queue_per_tenant=cap)
+    shadow = []                      # (tenant, uid) in admission order
+    next_uid = 0
+    admitted = rejected = dispatched = 0
+    for _ in range(60):
+        if shadow and rng.random() < 0.4:
+            n = int(rng.integers(1, len(shadow) + 1))
+            _, ts, uids, sids = router.take(n)
+            want = shadow[:n]
+            del shadow[:n]
+            dispatched += n
+            assert uids.tolist() == [u for _, u in want]      # exact order
+            assert sids.tolist() == [t for t, _ in want]
+        else:
+            t = int(rng.integers(0, n_tenants))
+            b = int(rng.integers(1, 12))
+            payload = np.zeros((b, 4), np.float32)
+            uids = np.arange(next_uid, next_uid + b, dtype=np.int32)
+            queued_t = router.queued_by_tenant[t]
+            before = [router.queued_by_tenant[k] for k in range(n_tenants)]
+            if queued_t + b > cap:
+                with pytest.raises(TenantBackpressure):
+                    router.admit(t, payload, np.zeros(b), uids)
+                # all-or-nothing: nothing enqueued, nothing counted admitted
+                rejected += b
+                assert [router.queued_by_tenant[k]
+                        for k in range(n_tenants)] == before
+                assert len(router) == len(shadow)
+            else:
+                router.admit(t, payload, np.zeros(b), uids)
+                shadow.extend((t, int(u)) for u in uids)
+                next_uid += b
+                admitted += b
+        # accounting identities, after every operation
+        tel = router.telemetry
+        assert tel.items_admitted == admitted
+        assert tel.items_rejected == rejected
+        assert tel.items_dispatched == dispatched
+        assert len(router) == len(shadow) == admitted - dispatched
+        for k in range(n_tenants):
+            assert router.queued_by_tenant[k] == sum(
+                1 for t, _ in shadow if t == k
+            )
+        assert tel.queue_delay_sum_s >= 0.0
+
+
+@pytest.mark.parametrize("seed,cap", [(0, 16), (1, 8), (2, 31), (3, 1)])
+def test_router_schedule_sweep(seed, cap):
+    _check_router_schedule(seed, n_tenants=3, cap=cap)
+
+
+def _check_coalescing_invariance(seed, span, flush_every, streams, events,
+                                 ref_maps, ref_sets):
+    """One arbitrary coalescing of the same admitted traffic must emit the
+    identical per-tenant pair sets (uids assign at admission, which every
+    plan shares)."""
+    rng = np.random.default_rng(seed)
+    plan = rng.integers(1, 48, 24).tolist()
+    rt, per, maps = _run(
+        streams, events, submit_plan=plan, flush_every=flush_every, span=span,
+    )
+    assert maps == ref_maps
+    assert _pair_sets(per) == ref_sets, (seed, span, flush_every)
+    assert rt.pairs_dropped == 0
+
+
+_PROP_CACHE = {}
+
+
+def _prop_reference():
+    """Reference emission for the property runs (computed once)."""
+    if "ref" not in _PROP_CACHE:
+        streams, events = _tenant_streams(n_per=40)
+        _, per, maps = _run(streams, events, submit_plan=[1])
+        _PROP_CACHE["ref"] = (streams, events, maps, _pair_sets(per))
+    return _PROP_CACHE["ref"]
+
+
+@pytest.mark.parametrize("seed,span,flush_every", [
+    (0, 2, None), (1, 1, 1), (2, 3, 2),
+])
+def test_coalescing_invariance_sweep(seed, span, flush_every):
+    streams, events, ref_maps, ref_sets = _prop_reference()
+    _check_coalescing_invariance(
+        seed, span, flush_every, streams, events, ref_maps, ref_sets
+    )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        cap=st.integers(1, 64),
+        n_tenants=st.integers(1, 5),
+    )
+    def test_router_schedule_property(seed, cap, n_tenants):
+        _check_router_schedule(seed, n_tenants=n_tenants, cap=cap)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        span=st.integers(1, 3),
+        flush_every=st.sampled_from([None, 1, 2, 3]),
+    )
+    def test_coalescing_invariance_property(seed, span, flush_every):
+        streams, events, ref_maps, ref_sets = _prop_reference()
+        _check_coalescing_invariance(
+            seed, span, flush_every, streams, events, ref_maps, ref_sets
+        )
 
 
 # --------------------------------------------------------------------- #
