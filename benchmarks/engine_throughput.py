@@ -47,7 +47,7 @@ import numpy as np
 
 from repro.data.synth import dense_embedding_stream
 from repro.engine import EngineConfig, StreamEngine
-from repro.engine.window import init_window, push_batch
+from repro.engine.window import init_window, push_with_overflow
 from repro.kernels.sssj_join import (
     compact_pairs,
     merge_candidates,
@@ -68,6 +68,7 @@ class _HostDriver:
                        block_w=cfg.block_w, chunk_d=cfg.chunk_d,
                        use_ref=cfg.use_ref)
         self.state = init_window(cfg.capacity, cfg.d)
+        self.tau = cfg.tau
         self.uid0 = 0
         self.bytes_to_host = 0
 
@@ -90,7 +91,10 @@ class _HostDriver:
                 pairs.add((int(w_uids[b]), int(uq[a])))
             for a, b in zip(*np.nonzero(s_self)):
                 pairs.add((int(uq[b]), int(uq[a])))
-            self.state = push_batch(self.state, q, tq, uqj)
+            self.state = push_with_overflow(
+                self.state, q, tq, uqj, jnp.int32(q.shape[0]), tq.max(),
+                self.tau,
+            )
         return pairs
 
 

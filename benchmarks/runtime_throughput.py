@@ -32,10 +32,20 @@ Results are written machine-readably to ``BENCH_runtime.json``.
 host-platform device-count trick) and enforces that the sharded per-tenant
 pair sets are identical to the single-device ones (DESIGN.md §10).
 
-Standalone usage (CI smoke runs this):
+``--eviction {oldest,dead,quota}`` selects the window write-slot policy
+for the coalescing comparison (DESIGN.md §11; quota splits the ring
+evenly), and ``--bursty`` runs the tenant-isolation scenario: one tenant
+floods at ≫10× the others' rate into a deliberately undersized ring,
+under **each** policy.  Claims enforced there: the slow tenants' live-item
+overflow is *lower* under ``quota`` than under ``oldest``, and under
+``quota`` the slow tenants' pair sets equal the brute-force truth
+(pair-set check).  ``--bursty`` writes ``BENCH_eviction.json`` by default.
+
+Standalone usage (CI smoke runs these):
 
     PYTHONPATH=src python -m benchmarks.runtime_throughput --smoke
     PYTHONPATH=src python -m benchmarks.runtime_throughput --smoke --shards 2
+    PYTHONPATH=src python -m benchmarks.runtime_throughput --smoke --bursty
 """
 
 from __future__ import annotations
@@ -77,13 +87,14 @@ if _n > 1 and "xla_force_host_platform_device_count" not in os.environ.get(
 
 import numpy as np
 
-from repro.data.synth import dense_embedding_stream
-from repro.engine import EngineConfig
+from repro.data.synth import bursty_tenant_traffic, dense_embedding_stream
+from repro.engine import EngineConfig, quota_partition
 from repro.runtime import MultiTenantRuntime, ShardedFacade, TenantTable
 
 from .common import Row
 
 JSON_PATH = "BENCH_runtime.json"
+BURSTY_JSON_PATH = "BENCH_eviction.json"
 
 
 def _traffic(n_tenants, rounds, per_round, d, seed=0):
@@ -127,7 +138,10 @@ def _run(events, cfg, table, span, coalesce: bool, engine=None):
     return rt, elapsed, pairs_per_tenant
 
 
-def run(fast: bool = True, smoke: bool = False, shards: int = 1) -> List[Row]:
+def run(
+    fast: bool = True, smoke: bool = False, shards: int = 1,
+    eviction: str = "oldest",
+) -> List[Row]:
     rows: List[Row] = []
     if smoke:
         n_tenants, rounds, per_round, d, mb, cap = 8, 4, 4, 32, 32, 512
@@ -141,12 +155,17 @@ def run(fast: bool = True, smoke: bool = False, shards: int = 1) -> List[Row]:
     rows.append(Row("runtime/n_tenants", float(n_tenants)))
     rows.append(Row("runtime/items_per_submit", float(per_round)))
     rows.append(Row("runtime/shards", float(shards)))
+    rows.append(Row("runtime/eviction_" + eviction, 1.0))
 
     table = TenantTable.uniform(n_tenants, theta, lam)
+    quotas = (
+        quota_partition(cap, [1.0] * n_tenants)
+        if eviction == "quota" else None
+    )
     cfg = EngineConfig(
         theta=theta, lam=lam, capacity=cap, d=d, micro_batch=mb,
         max_pairs=4096, tile_k=mb * mb, block_q=mb, block_w=mb,
-        chunk_d=min(d, 128),
+        chunk_d=min(d, 128), eviction=eviction, quotas=quotas,
     )
     n_items = n_tenants * rounds * per_round
     events = _traffic(n_tenants, rounds, per_round, d)
@@ -199,7 +218,9 @@ def run(fast: bool = True, smoke: bool = False, shards: int = 1) -> List[Row]:
         scfg = EngineConfig(
             theta=theta, lam=lam, capacity=cap // shards, d=d,
             micro_batch=mb, max_pairs=4096, tile_k=mb * mb, block_q=mb,
-            block_w=mb, chunk_d=min(d, 128),
+            block_w=mb, chunk_d=min(d, 128), eviction=eviction,
+            quotas=None if quotas is None
+            else quota_partition(cap // shards, [1.0] * n_tenants),
         )
         _run(warm, scfg, table, span, True, engine=ShardedFacade(mesh))
         rt_sh, t_sh, pairs_sh = _run(
@@ -218,6 +239,127 @@ def run(fast: bool = True, smoke: bool = False, shards: int = 1) -> List[Row]:
                         float(max(ssh["shards"]["live_slots"])),
                         "per-shard ring liveness"))
     return rows
+
+
+def _slow_truth(per_tenant, theta, lam):
+    """Per-slow-tenant brute-force pair sets in local index space."""
+    out = []
+    for vecs, ts in per_tenant[1:]:
+        dec = (vecs @ vecs.T) * np.exp(-lam * np.abs(ts[:, None] - ts[None, :]))
+        n = vecs.shape[0]
+        out.append({
+            (j, i) for i in range(n) for j in range(i) if dec[i, j] >= theta
+        })
+    return out
+
+
+def run_bursty(smoke: bool = False, shards: int = 1) -> List[Row]:
+    """Tenant-isolation scenario: the identical bursty traffic under every
+    eviction policy; per-policy slow-tenant overflow and pair recall."""
+    rows: List[Row] = []
+    if smoke:
+        n_slow, rounds, burst, d, mb, cap = 3, 8, 45, 32, 16, 32
+    else:
+        # per-round arrivals (burst + n_slow) must exceed capacity plus the
+        # micro-batch ingest lag (cap + mb − 1) so oldest-first reliably
+        # evicts the slow tenants' previous round
+        n_slow, rounds, burst, d, mb, cap = 7, 20, 150, 64, 32, 96
+    k_total = n_slow + 1
+    th_slow, lam_slow = 0.8, 0.1
+    table = TenantTable(
+        [0.9] + [th_slow] * n_slow, [2.0] + [lam_slow] * n_slow
+    )
+    submits, per_tenant = bursty_tenant_traffic(n_slow, rounds, burst, d,
+                                                seed=11)
+    truth = _slow_truth(per_tenant, th_slow, lam_slow)
+    n_true = sum(len(t) for t in truth)
+    engine = None
+    if shards > 1:
+        import jax
+
+        engine = ShardedFacade(jax.make_mesh((shards,), ("data",)))
+    rows.append(Row("bursty/smoke_mode", float(smoke)))
+    rows.append(Row("bursty/shards", float(shards)))
+    rows.append(Row("bursty/n_slow_tenants", float(n_slow)))
+    rows.append(Row("bursty/burst_per_round", float(burst)))
+    rows.append(Row("bursty/true_slow_pairs", float(n_true)))
+
+    for eviction in ("oldest", "dead", "quota"):
+        quotas = (
+            quota_partition(cap // shards, [1.0] * k_total)
+            if eviction == "quota" else None
+        )
+        cfg = EngineConfig(
+            theta=th_slow, lam=lam_slow, capacity=cap // shards, d=d,
+            micro_batch=mb, max_pairs=8192, tile_k=mb * mb, block_q=mb,
+            block_w=mb, chunk_d=min(d, 128), join_impl="scan",
+            eviction=eviction, quotas=quotas,
+        )
+        rt = MultiTenantRuntime(cfg, table, span=2,
+                                max_queue_per_tenant=1 << 20, engine=engine)
+        local_of = [dict() for _ in range(k_total)]
+        counts = [0] * k_total
+        t0 = time.perf_counter()
+        for k, v, t in submits:
+            for u in rt.submit(k, v, t).tolist():
+                local_of[k][u] = counts[k]
+                counts[k] += 1
+        rt.flush(final=True)
+        per = rt.drain_by_tenant()
+        elapsed = time.perf_counter() - t0
+        got = []
+        for k in range(1, k_total):
+            ua, ub = per[k][0], per[k][1]
+            got.append({
+                tuple(sorted((local_of[k][a], local_of[k][b])))
+                for a, b in zip(ua.tolist(), ub.tolist())
+            })
+        s = rt.stats()
+        by = s["window_overflow_by_tenant"]
+        slow_ovf = sum(by[1:])
+        recall = sum(len(g & t) for g, t in zip(got, truth)) / max(n_true, 1)
+        exact = all(g == t for g, t in zip(got, truth))
+        p = f"bursty/{eviction}"
+        rows.append(Row(f"{p}/slow_overflow", float(slow_ovf),
+                        f"bursty tenant lost {by[0]} of its own"))
+        rows.append(Row(f"{p}/bursty_overflow", float(by[0])))
+        rows.append(Row(f"{p}/overflow_by_tenant_sums", float(
+            sum(by) == s["window_overflow"]
+        )))
+        rows.append(Row(f"{p}/slow_pair_recall", recall,
+                        f"{n_true} true pairs over {n_slow} slow tenants"))
+        rows.append(Row(f"{p}/slow_pairs_exact", float(exact)))
+        rows.append(Row(f"{p}/items_per_s", s["n_items"] / elapsed,
+                        f"{elapsed*1e3:.0f} ms for {s['n_items']} items"))
+    return rows
+
+
+def check_bursty(rows: List[Row]) -> List[str]:
+    by = {r.name: r.value for r in rows}
+    problems = []
+    for ev in ("oldest", "dead", "quota"):
+        if by.get(f"bursty/{ev}/overflow_by_tenant_sums") != 1.0:
+            problems.append(
+                f"{ev}: window_overflow_by_tenant does not sum to "
+                f"window_overflow"
+            )
+    if by.get("bursty/quota/slow_overflow", 1.0) >= \
+            by.get("bursty/oldest/slow_overflow", 0.0):
+        problems.append(
+            "quota eviction did not lower slow-tenant overflow vs oldest "
+            f"({by.get('bursty/quota/slow_overflow')} vs "
+            f"{by.get('bursty/oldest/slow_overflow')})"
+        )
+    if by.get("bursty/quota/slow_pairs_exact") != 1.0:
+        problems.append(
+            "quota: within-quota tenants did not emit their exact truth "
+            f"(recall {by.get('bursty/quota/slow_pair_recall'):.3f})"
+        )
+    if by.get("bursty/oldest/slow_pair_recall", 1.0) >= 1.0:
+        problems.append(
+            "bursty scenario is vacuous: oldest-first lost no slow pairs"
+        )
+    return problems
 
 
 def check(rows: List[Row]) -> List[str]:
@@ -265,26 +407,45 @@ def main() -> None:
                     help="also run the coalesced driver on ShardedFacade "
                          "over this many in-process shards (forces host "
                          "platform devices before jax init)")
-    ap.add_argument("--json", default=JSON_PATH,
-                    help=f"machine-readable output path (default {JSON_PATH})")
+    ap.add_argument("--eviction", choices=["oldest", "dead", "quota"],
+                    default="oldest",
+                    help="window write-slot policy for the coalescing "
+                         "comparison (DESIGN.md §11)")
+    ap.add_argument("--bursty", action="store_true",
+                    help="run the bursty-tenant isolation scenario instead: "
+                         "identical flood traffic under each eviction "
+                         "policy; enforces lower slow-tenant overflow and "
+                         "exact slow pair sets under quota")
+    ap.add_argument("--json", default=None,
+                    help=f"machine-readable output path (default {JSON_PATH}, "
+                         f"{BURSTY_JSON_PATH} with --bursty)")
     args = ap.parse_args()
+    json_path = args.json or (BURSTY_JSON_PATH if args.bursty else JSON_PATH)
     t0 = time.time()
-    rows = run(fast=not args.full, smoke=args.smoke, shards=args.shards)
+    if args.bursty:
+        rows = run_bursty(smoke=args.smoke, shards=args.shards)
+        problems = check_bursty(rows)
+    else:
+        rows = run(fast=not args.full, smoke=args.smoke, shards=args.shards,
+                   eviction=args.eviction)
+        problems = check(rows)
     print("name,value,extra")
     for r in rows:
         print(r.csv())
-    problems = check(rows)
     payload = {
-        "benchmark": "runtime_throughput",
+        "benchmark": (
+            "runtime_throughput_bursty" if args.bursty else "runtime_throughput"
+        ),
         "mode": "smoke" if args.smoke else ("fast" if not args.full else "full"),
         "shards": args.shards,
+        "eviction": "all" if args.bursty else args.eviction,
         "elapsed_s": round(time.time() - t0, 3),
         "rows": [dict(name=r.name, value=r.value, extra=r.extra) for r in rows],
         "problems": problems,
     }
-    with open(args.json, "w") as f:
+    with open(json_path, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"# wrote {args.json} ({len(rows)} rows) in {payload['elapsed_s']}s")
+    print(f"# wrote {json_path} ({len(rows)} rows) in {payload['elapsed_s']}s")
     for p in problems:
         print(f"# CLAIM-FAIL {p}")
     sys.exit(1 if problems else 0)

@@ -6,8 +6,11 @@ now lives in :mod:`repro.engine` — the ring-buffer window carried through a
 remains here is the original public surface, preserved for existing
 callers and tests:
 
-  * :class:`WindowState` / :func:`init_window` / :func:`push_batch` —
-    re-exported from :mod:`repro.engine.window`;
+  * :class:`WindowState` / :func:`init_window` /
+    :func:`push_with_overflow` — re-exported from
+    :mod:`repro.engine.window` (the unmasked, overflow-blind
+    ``push_batch`` is gone: every write path now goes through the policy
+    layer and counts live-slot overwrites, DESIGN.md §11);
   * :class:`BlockedJoinConfig` — the historical config dataclass, mapped
     onto :class:`repro.engine.EngineConfig`;
   * :class:`BlockedStreamJoiner` — the synchronous push-and-extract driver,
@@ -23,7 +26,11 @@ import dataclasses
 import numpy as np
 
 from ..engine.engine import EngineConfig, StreamEngine
-from ..engine.window import WindowState, init_window, push_batch  # noqa: F401
+from ..engine.window import (  # noqa: F401
+    WindowState,
+    init_window,
+    push_with_overflow,
+)
 from .similarity import time_horizon
 
 __all__ = ["WindowState", "init_window", "BlockedJoinConfig", "BlockedStreamJoiner"]

@@ -29,7 +29,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..distributed.sharding import shard_map
 from ..kernels.sssj_join import sssj_join_scores
-from .blocked import BlockedJoinConfig, WindowState, init_window, push_batch
+from .blocked import (
+    BlockedJoinConfig,
+    WindowState,
+    init_window,
+    push_with_overflow,
+)
 
 __all__ = ["DistributedJoinConfig", "make_distributed_join_step", "init_sharded_window"]
 
@@ -104,19 +109,20 @@ def make_distributed_join_step(cfg: DistributedJoinConfig, mesh: Mesh):
         ug = jax.lax.all_gather(uq, axis, tiled=True)
         scores_self, _ = sssj_join_scores(q, qg, tq, tg, uq, ug, **kw)
 
-        # push this device's query shard into its local window shard
+        # push this device's query shard into its local window shard —
+        # through the policy layer, so the live-slot overwrite accounting
+        # is the engine's, not a hand-rolled duplicate (DESIGN.md §11)
         sub = WindowState(
             vecs=state.vecs, ts=state.ts, uids=state.uids,
             cursor=state.cursor[0], overflow=state.overflow[0],
         )
-        old_t = sub.ts[(sub.cursor + jnp.arange(q.shape[0], dtype=jnp.int32)) % wl]
-        old_u = sub.uids[(sub.cursor + jnp.arange(q.shape[0], dtype=jnp.int32)) % wl]
-        live = (old_u >= 0) & (tq.max() - old_t <= b.tau)
-        new_sub = push_batch(sub, q, tq, uq)
+        new_sub = push_with_overflow(
+            sub, q, tq, uq, jnp.int32(q.shape[0]), tq.max(), b.tau
+        )
         new_state = WindowState(
             vecs=new_sub.vecs, ts=new_sub.ts, uids=new_sub.uids,
-            cursor=(new_sub.cursor)[None],
-            overflow=(sub.overflow + jnp.sum(live.astype(jnp.int32)))[None],
+            cursor=new_sub.cursor[None],
+            overflow=new_sub.overflow[None],
         )
         return new_state, (scores_win, scores_self)
 

@@ -35,6 +35,7 @@ __all__ = [
     "StreamSpec",
     "DATASET_SPECS",
     "synthetic_stream",
+    "bursty_tenant_traffic",
     "dense_embedding_stream",
     "planted_duplicates",
 ]
@@ -132,6 +133,55 @@ def dense_embedding_stream(
             base[i] = base[src] + dup_noise * rng.standard_normal(d)
     base /= np.linalg.norm(base, axis=1, keepdims=True)
     return base.astype(np.float32), ts.astype(np.float64)
+
+
+def bursty_tenant_traffic(
+    n_slow: int,
+    rounds: int,
+    burst: int,
+    d: int,
+    seed: int = 7,
+    repost_gap: float = 1.5,
+    dup_noise: float = 0.02,
+):
+    """Multi-tenant flood traffic: the eviction-policy stress stream
+    shared by the conformance suite, the bursty benchmark, and the
+    example (DESIGN.md §11).
+
+    Tenant 0 floods ``burst`` random unit vectors per round; slow tenants
+    ``1..n_slow`` each repost a noisy copy of their own base vector once
+    per round, ``repost_gap`` time units apart — so consecutive reposts
+    pair *iff* the previous one still lives in the window, which is
+    exactly what a bursty co-tenant threatens under oldest-first
+    eviction.
+
+    Returns ``(submits, per_tenant)``: ``submits`` is a time-ordered list
+    of ``(tenant, vecs (b, d) f32, ts (b,))`` submit calls, and
+    ``per_tenant[k]`` is tenant *k*'s full ``(vecs, ts)`` stream in local
+    index order (the brute-force-truth input).
+    """
+    rng = np.random.default_rng(seed)
+    bases = rng.standard_normal((n_slow + 1, d))
+    submits = []
+    streams: List[list] = [[] for _ in range(n_slow + 1)]
+    for r in range(rounds):
+        t0 = repost_gap * r
+        for k in range(1, n_slow + 1):
+            v = bases[k] + dup_noise * rng.standard_normal(d)
+            v = (v / np.linalg.norm(v)).astype(np.float32)
+            tk = np.array([t0 + 0.01 * k])
+            streams[k].append((v[None], tk))
+            submits.append((k, v[None], tk))
+        vb = rng.standard_normal((burst, d))
+        vb = (vb / np.linalg.norm(vb, axis=1, keepdims=True)).astype(np.float32)
+        tb = t0 + 0.1 + 0.003 * np.arange(burst)
+        streams[0].append((vb, tb))
+        submits.append((0, vb, tb))
+    per_tenant = [
+        (np.concatenate([v for v, _ in s]), np.concatenate([t for _, t in s]))
+        for s in streams
+    ]
+    return submits, per_tenant
 
 
 def planted_duplicates(

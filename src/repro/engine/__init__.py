@@ -2,8 +2,9 @@
 
 Layers (DESIGN.md §4–§5):
 
-  * :mod:`~repro.engine.window` — ring-buffer window primitives shared by
-    every driver (the device form of the paper's circular posting lists);
+  * :mod:`~repro.engine.window` — policy-driven ring-buffer window
+    primitives shared by every driver (the device form of the paper's
+    circular posting lists, with pluggable write-slot/eviction policies);
   * :mod:`~repro.engine.engine` — :class:`StreamEngine`: ``lax.scan`` over
     micro-batches with donated carry, on-device pair compaction, async
     host drain;
@@ -30,9 +31,10 @@ from .sharded import (  # noqa: F401
     window_axis,
 )
 from .window import (  # noqa: F401
+    EVICTION_POLICIES,
     WindowState,
     init_window,
-    push_batch,
-    push_batch_masked,
     push_with_overflow,
+    quota_partition,
+    select_write_slots,
 )

@@ -59,7 +59,12 @@ from ..kernels.sssj_join import (
     sssj_join_candidates,
     sssj_join_tiles,
 )
-from .window import WindowState, init_window, push_with_overflow
+from .window import (
+    EVICTION_POLICIES,
+    WindowState,
+    init_window,
+    push_with_overflow,
+)
 
 __all__ = [
     "EngineConfig",
@@ -89,6 +94,9 @@ class EngineConfig:
     join_impl: Optional[str] = None  # candidate impl: pallas/scan/dense; None=auto
     use_ref: bool = False        # route joins through the jnp oracle
     interpret: Optional[bool] = None
+    eviction: str = "oldest"     # write-slot policy: oldest/dead/quota (§11)
+    quotas: Optional[Tuple[int, ...]] = None  # per-stream slots (quota policy);
+    #                                           sums to capacity (per shard)
 
     def __post_init__(self) -> None:
         """Reject configurations that would only fail later as opaque shape
@@ -127,10 +135,52 @@ class EngineConfig:
                 f"join_impl must be one of None/'pallas'/'scan'/'dense', "
                 f"got {self.join_impl!r}"
             )
+        if self.eviction not in EVICTION_POLICIES:
+            raise ValueError(
+                f"eviction must be one of {EVICTION_POLICIES}, "
+                f"got {self.eviction!r}"
+            )
+        if self.quotas is not None:
+            if self.eviction != "quota":
+                raise ValueError(
+                    f"quotas are only meaningful under eviction='quota' "
+                    f"(got eviction={self.eviction!r})"
+                )
+            qs = tuple(self.quotas)
+            for i, v in enumerate(qs):
+                if (isinstance(v, bool) or not isinstance(v, (int, np.integer))
+                        or v < 1):
+                    raise ValueError(
+                        f"quotas[{i}] must be a positive int, got {v!r}"
+                    )
+            if sum(int(v) for v in qs) != self.capacity:
+                raise ValueError(
+                    f"quotas must sum to capacity ({self.capacity}), got "
+                    f"{sum(int(v) for v in qs)} over {len(qs)} streams"
+                )
+            object.__setattr__(self, "quotas", tuple(int(v) for v in qs))
+        elif self.eviction == "quota":
+            raise ValueError("eviction='quota' requires a quotas table")
 
     @property
     def tau(self) -> float:
         return time_horizon(self.theta, self.lam)
+
+    @property
+    def n_lanes(self) -> Optional[int]:
+        """Stream-lane count the window state must carry for this config
+        (from the quota table; the multi-tenant runtime widens it to its
+        tenant count so per-victim overflow attribution works under any
+        policy)."""
+        return None if self.quotas is None else len(self.quotas)
+
+    def quotas_device(self) -> Optional[jax.Array]:
+        """The quota table as a device array (``None`` off-quota) — what
+        the write-slot policy consumes inside the jitted step."""
+        return (
+            None if self.quotas is None
+            else jnp.asarray(self.quotas, jnp.int32)
+        )
 
     @property
     def join_kwargs(self) -> dict:
@@ -324,9 +374,13 @@ def make_batch_step(cfg: EngineConfig):
     the per-row match masks.  State and telemetry are donated.
     """
     tau = cfg.tau
+    quo = cfg.quotas_device()
 
     def ingest(state, q, tq, uq, n_valid, t_max):
-        return push_with_overflow(state, q, tq, uq, n_valid, t_max, tau)
+        return push_with_overflow(
+            state, q, tq, uq, n_valid, t_max, tau,
+            eviction=cfg.eviction, quotas=quo,
+        )
 
     micro_step = make_micro_step(cfg, ingest)
 
@@ -485,9 +539,19 @@ class StreamEngineBase:
             np.asarray(t.dropped).sum() + np.asarray(t.dropped_tile).sum()
         )
 
+    @property
+    def overflow_by_tenant(self) -> Optional[np.ndarray]:
+        """Per-victim-stream live overwrites ``(n_lanes,)``, summed over
+        shards; ``None`` when the state carries no stream lanes."""
+        lo = self.state.lane_overflow
+        if lo is None:
+            return None
+        arr = np.asarray(lo)
+        return arr.reshape(-1, arr.shape[-1]).sum(axis=0)
+
     def stats(self) -> dict:
         t = jax.tree.map(lambda x: int(np.asarray(x).sum()), self.telem)
-        return {
+        out = {
             "n_items": self.n_items,
             "chunks_executed": t.chunks,
             "tiles_total": t.tiles,
@@ -499,6 +563,10 @@ class StreamEngineBase:
             "bytes_to_host": self.bytes_to_host,
             "bytes_dense_equiv": self.bytes_dense_equiv,
         }
+        by_tenant = self.overflow_by_tenant
+        if by_tenant is not None:
+            out["window_overflow_by_tenant"] = by_tenant.tolist()
+        return out
 
 
 class StreamEngine(StreamEngineBase):
@@ -506,6 +574,8 @@ class StreamEngine(StreamEngineBase):
 
     def __init__(self, cfg: EngineConfig) -> None:
         super().__init__(cfg)
-        self.state: WindowState = init_window(cfg.capacity, cfg.d)
+        self.state: WindowState = init_window(
+            cfg.capacity, cfg.d, n_lanes=cfg.n_lanes, eviction=cfg.eviction
+        )
         self.telem = init_telemetry()
         self._step = make_batch_step(cfg)

@@ -91,16 +91,32 @@ def window_axis(mesh: Mesh, rules: AxisRules = DEFAULT_RULES) -> str:
     )
 
 
-def init_sharded_window(cfg: EngineConfig, mesh: Mesh, axis: str) -> WindowState:
+def init_sharded_window(
+    cfg: EngineConfig, mesh: Mesh, axis: str, n_lanes: Optional[int] = None
+) -> WindowState:
     """Global window of ``cfg.capacity`` per-shard slots × axis size.
 
     The ``sids`` stream-id lane is always materialized (sharded like
     ``uids``) so the same state pytree serves both the single-tenant
-    engine and the multi-tenant runtime's sharded path.
+    engine and the multi-tenant runtime's sharded path.  ``n_lanes``
+    materializes the per-stream policy lanes (DESIGN.md §11) as
+    ``(n_shards, n_lanes)`` replicated-in-lane arrays: each shard owns
+    its row — quota sub-rings (and their cursors) are **shard-local**.
     """
     n = mesh.shape[axis]
+    if n_lanes is None:
+        n_lanes = cfg.n_lanes
     state = init_window(cfg.capacity * n, cfg.d)
     shard = NamedSharding(mesh, P(axis))
+    lane_shard = NamedSharding(mesh, P(axis, None))
+
+    def lanes():
+        # distinct buffers — the step donates the whole pytree
+        return (
+            None if n_lanes is None
+            else jax.device_put(jnp.zeros((n, n_lanes), jnp.int32), lane_shard)
+        )
+
     return WindowState(
         vecs=jax.device_put(state.vecs, NamedSharding(mesh, P(axis, None))),
         ts=jax.device_put(state.ts, shard),
@@ -108,6 +124,8 @@ def init_sharded_window(cfg: EngineConfig, mesh: Mesh, axis: str) -> WindowState
         cursor=jax.device_put(jnp.zeros((n,), jnp.int32), shard),
         overflow=jax.device_put(jnp.zeros((n,), jnp.int32), shard),
         sids=jax.device_put(state.sids, shard),
+        lane_cursor=lanes() if cfg.eviction == "quota" else None,
+        lane_overflow=lanes(),
     )
 
 
@@ -136,6 +154,8 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
     if cfg.micro_batch % p != 0:
         raise ValueError(f"micro_batch {cfg.micro_batch} not divisible by {p} shards")
     multi = table is not None
+    quota = cfg.eviction == "quota"
+    lanes = multi or cfg.n_lanes is not None
     tau = table.tau_max if multi else cfg.tau
     per_row = multi and not table.is_uniform
     bl = cfg.micro_batch // p         # arrivals per shard per micro-batch
@@ -145,7 +165,7 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
     # after the gather
     local_cfg = dataclasses.replace(cfg, max_pairs=shard_k)
 
-    def local_core(state, telem, xs, th_t, lm_t):
+    def local_core(state, telem, xs, th_t, lm_t, quo_t):
         me = jax.lax.axis_index(axis)
 
         def ingest(st, q, tq, uq, n_valid, t_max, sq=None):
@@ -155,6 +175,7 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
             return push_with_overflow(
                 st, q[idx], tq[idx], uq[idx], n_valid_l, t_max, tau,
                 sq=None if sq is None else sq[idx],
+                eviction=cfg.eviction, quotas=quo_t,
             )
 
         # replicated inputs ⇒ every shard computes the same self candidates;
@@ -179,10 +200,24 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
         )
 
         # per-shard scalars travel as (1,) slices of the P(axis) arrays
-        sub = state._replace(cursor=state.cursor[0], overflow=state.overflow[0])
+        # (and the policy lanes as (1, n_lanes) rows)
+        def lane0(x):
+            return None if x is None else x[0]
+
+        sub = state._replace(
+            cursor=state.cursor[0], overflow=state.overflow[0],
+            lane_cursor=lane0(state.lane_cursor),
+            lane_overflow=lane0(state.lane_overflow),
+        )
         tl = jax.tree.map(lambda x: x[0], telem)
         (sub, tl), (bufs, masks) = jax.lax.scan(micro, (sub, tl), xs)
-        state = sub._replace(cursor=sub.cursor[None], overflow=sub.overflow[None])
+        state = sub._replace(
+            cursor=sub.cursor[None], overflow=sub.overflow[None],
+            lane_cursor=None if sub.lane_cursor is None
+            else sub.lane_cursor[None],
+            lane_overflow=None if sub.lane_overflow is None
+            else sub.lane_overflow[None],
+        )
         telem = jax.tree.map(lambda x: x[None], tl)
         # scalar leaves come out of the scan as (n_micro,); give them a
         # trailing axis so out_specs can concatenate shards along it, and
@@ -194,20 +229,29 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
         )
         return state, telem, bufs, masks[:, None, :]
 
-    if multi:
-        def local_batch(state, telem, qs, tqs, uqs, sqs, th_t, lm_t, nvs):
-            return local_core(
-                state, telem, (qs, tqs, uqs, sqs, nvs), th_t, lm_t
-            )
-        n_bcast = 7   # qs, tqs, uqs, sqs, th_t, lm_t, nvs — all replicated
-    else:
-        def local_batch(state, telem, qs, tqs, uqs, nvs):
-            return local_core(state, telem, (qs, tqs, uqs, nvs), None, None)
-        n_bcast = 4
+    # replicated broadcast args: query lanes, then the optional device
+    # tables — tenant (θ, λ) and, under quota eviction, the per-shard
+    # quota table (in_specs P() like the tenant tables, DESIGN.md §11) —
+    # then the valid-row counts
+    def local_batch(state, telem, *rest):
+        if multi:
+            qs, tqs, uqs, sqs, th_t, lm_t, *rest = rest
+        else:
+            qs, tqs, uqs, *rest = rest
+            sqs = th_t = lm_t = None
+        quo_t, (nvs,) = (rest[0], rest[1:]) if quota else (None, rest)
+        xs = (
+            (qs, tqs, uqs, sqs, nvs) if multi else (qs, tqs, uqs, nvs)
+        )
+        return local_core(state, telem, xs, th_t, lm_t, quo_t)
+
+    n_bcast = 4 + (3 if multi else 0) + (1 if quota else 0)
 
     state_specs = WindowState(
         vecs=P(axis, None), ts=P(axis), uids=P(axis),
         cursor=P(axis), overflow=P(axis), sids=P(axis),
+        lane_cursor=P(axis, None) if (lanes and quota) else None,
+        lane_overflow=P(axis, None) if lanes else None,
     )
     telem_specs = EngineTelemetry(*(P(axis) for _ in EngineTelemetry._fields))
     buf_specs = PairBuffer(
@@ -260,19 +304,22 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
         extra = jax.tree.map(lambda x: x[p:], telem)
         return tin, extra
 
+    quo_tail = (cfg.quotas_device(),) if quota else ()
     if multi:
         th_d, lm_d = table.device_tables
 
         def batch_step(state, telem, qs, tqs, uqs, sqs, nvs):
             tin, extra = split_lanes(telem)
             state, tout, bufs, masks = fn(
-                state, tin, qs, tqs, uqs, sqs, th_d, lm_d, nvs
+                state, tin, qs, tqs, uqs, sqs, th_d, lm_d, *quo_tail, nvs
             )
             return finish(state, tout, extra, bufs, masks)
     else:
         def batch_step(state, telem, qs, tqs, uqs, nvs):
             tin, extra = split_lanes(telem)
-            state, tout, bufs, masks = fn(state, tin, qs, tqs, uqs, nvs)
+            state, tout, bufs, masks = fn(
+                state, tin, qs, tqs, uqs, *quo_tail, nvs
+            )
             return finish(state, tout, extra, bufs, masks)
 
     return jax.jit(batch_step, donate_argnums=(0,))

@@ -1,57 +1,108 @@
-"""Ring-buffer window state: the device-resident time-filtered index.
+"""Policy-driven ring-buffer window: the device-resident time-filtered index.
 
 The paper's circular-buffer posting lists (§6.2) become one fixed-capacity
-device array of the most recent vectors.  Eviction is implicit — ring
-overwrite drops the oldest items, which the time filter justifies as long
-as ``capacity ≥ arrival_rate · τ`` — and an overflow counter records when
-live items (still within the horizon) were overwritten, so operators can
-size the window.
+device array of recent vectors, and the paper equates "oldest" with
+"evictable" — an assumption the multi-tenant runtime breaks: one bursty
+tenant can overwrite a slow tenant's still-live slots (DESIGN.md §11).
+Eviction is therefore a first-class **write-slot policy**, not an accident
+of the ring cursor.  :func:`select_write_slots` is a pure, scan-carryable
+function from ``(state, micro-batch)`` to per-row destination slots; three
+on-device policies exist:
 
-These primitives are shared by every layer: the single-device
-:class:`~repro.engine.engine.StreamEngine` carries a :class:`WindowState`
-through its ``lax.scan``, the sharded engine gives each device its own
-ring shard, and :mod:`repro.core.blocked` / :mod:`repro.core.distributed`
-re-export them for compatibility.
+  * ``"oldest"`` — today's behavior, the default: slots advance cyclically
+    from the cursor, so overwrite evicts the oldest item.  Bit-identical
+    to the pre-policy ring (same slots, same cursor, same counters).
+  * ``"dead"``   — prefer *dead* slots (empty, or expired relative to the
+    newest arrival's τ-horizon) before any live one, both in cyclic cursor
+    order.  On a fully-live ring this degrades exactly to ``"oldest"``;
+    when the ring is sized for the live set rather than the arrival rate,
+    it clamps live-slot overflow to the true excess ``n_valid − n_dead``.
+  * ``"quota"``  — weighted static partition of the ring into per-tenant
+    sub-rings: slot range ``[offset_k, offset_k + quota_k)`` belongs to
+    stream ``k`` and has its own cursor lane (``WindowState.lane_cursor``),
+    so a bursty tenant can only ever overwrite its *own* slots.
+
+Live-slot overwrites are counted globally (``overflow``) and — whenever
+the state carries lanes — per *victim* stream (``lane_overflow``: the
+tenant whose live item was lost), which is what
+``MultiTenantRuntime.stats()["window_overflow_by_tenant"]`` surfaces.
+
+These primitives are shared by every layer that owns a ring: the
+single-device :class:`~repro.engine.engine.StreamEngine` carries a
+:class:`WindowState` through its ``lax.scan``, the sharded engine gives
+each device its own ring shard (quota sub-rings stay shard-local), and
+:mod:`repro.core.blocked` / :mod:`repro.core.distributed` push through
+:func:`push_with_overflow` so every write path counts overwrites.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
+    "EVICTION_POLICIES",
     "WindowState",
     "init_window",
-    "push_batch",
-    "push_batch_masked",
     "push_with_overflow",
+    "quota_partition",
+    "select_write_slots",
 ]
 
 _EMPTY_T = jnp.float32(3.0e30)
 
+EVICTION_POLICIES = ("oldest", "dead", "quota")
+
 
 class WindowState(NamedTuple):
-    """Sharded ring buffer of recent stream items (a pytree).
+    """Ring buffer of recent stream items (a pytree).
 
     ``sids`` is the stream-id lane of the multi-tenant runtime
     (DESIGN.md §9): each slot remembers which logical stream its item
-    belongs to, so the join can mask cross-stream pairs on device.  It is
-    last and defaults to ``None`` so legacy constructions (and pytrees
-    that never multiplex streams, e.g. ``core/distributed.py``) stay
-    valid — ``None`` is simply an absent pytree leaf.
+    belongs to, so the join can mask cross-stream pairs on device.
+
+    ``lane_cursor``/``lane_overflow`` are the per-stream lanes of the
+    policy layer (DESIGN.md §11): ``lane_cursor[k]`` is stream *k*'s
+    write cursor inside its quota sub-ring (``"quota"`` eviction only),
+    and ``lane_overflow[k]`` counts live items of stream *k* that were
+    overwritten — attribution is to the **victim**, so a slow tenant can
+    see who lost data, under any policy.  All three trail and default to
+    ``None`` so legacy constructions (and pytrees that never multiplex
+    streams, e.g. ``core/distributed.py``) stay valid — ``None`` is
+    simply an absent pytree leaf.
     """
 
     vecs: jax.Array    # (capacity, d) f32
     ts: jax.Array      # (capacity,) f32; empty slots hold +3e30
     uids: jax.Array    # (capacity,) i32; empty slots hold -1
-    cursor: jax.Array  # () i32 — next write slot
+    cursor: jax.Array  # () i32 — next write slot (cyclic policies)
     overflow: jax.Array  # () i32 — live items overwritten (window undersized)
     sids: Optional[jax.Array] = None  # (capacity,) i32 stream ids; -1 = empty
+    lane_cursor: Optional[jax.Array] = None    # (n_lanes,) i32 sub-ring cursors
+    lane_overflow: Optional[jax.Array] = None  # (n_lanes,) i32 per-victim-stream
 
 
-def init_window(capacity: int, d: int, dtype=jnp.float32) -> WindowState:
+def init_window(
+    capacity: int,
+    d: int,
+    dtype=jnp.float32,
+    n_lanes: Optional[int] = None,
+    eviction: str = "oldest",
+) -> WindowState:
+    """Empty window.  ``n_lanes`` materializes the per-stream overflow lane
+    (and, under ``eviction="quota"``, the per-stream cursor lane)."""
+    if eviction not in EVICTION_POLICIES:
+        raise ValueError(
+            f"eviction must be one of {EVICTION_POLICIES}, got {eviction!r}"
+        )
+    # distinct lane buffers: steps donate the whole pytree, and donating
+    # one buffer twice is an error
+    def lanes():
+        return None if n_lanes is None else jnp.zeros((n_lanes,), jnp.int32)
+
     return WindowState(
         vecs=jnp.zeros((capacity, d), dtype),
         ts=jnp.full((capacity,), _EMPTY_T, jnp.float32),
@@ -59,61 +110,174 @@ def init_window(capacity: int, d: int, dtype=jnp.float32) -> WindowState:
         cursor=jnp.zeros((), jnp.int32),
         overflow=jnp.zeros((), jnp.int32),
         sids=jnp.full((capacity,), -1, jnp.int32),
+        lane_cursor=lanes() if eviction == "quota" else None,
+        lane_overflow=lanes(),
     )
+
+
+def quota_partition(capacity: int, weights: Sequence[float]) -> Tuple[int, ...]:
+    """Integer slot quotas from relative weights: ``quota_k ∝ weight_k``,
+    every stream gets ≥ 1 slot, and the quotas sum exactly to ``capacity``
+    (largest-remainder rounding)."""
+    w = np.asarray(weights, np.float64).reshape(-1)
+    k = w.size
+    if k == 0:
+        raise ValueError("quota_partition needs at least one weight")
+    if np.any(w <= 0):
+        raise ValueError(f"quota weights must be positive, got {w.tolist()}")
+    if capacity < k:
+        raise ValueError(f"capacity {capacity} < {k} streams: no slots to split")
+    raw = capacity * w / w.sum()
+    quotas = np.maximum(1, np.floor(raw).astype(np.int64))
+    # distribute the remainder by largest fractional part; a negative
+    # remainder (floors forced up to 1) shrinks the largest quotas instead
+    order = np.argsort(-(raw - np.floor(raw)), kind="stable")
+    rem = capacity - int(quotas.sum())
+    i = 0
+    while rem > 0:
+        quotas[order[i % k]] += 1
+        rem -= 1
+        i += 1
+    while rem < 0:
+        j = int(np.argmax(quotas))
+        if quotas[j] <= 1:
+            raise ValueError(
+                f"cannot partition capacity {capacity} over {k} streams"
+            )
+        quotas[j] -= 1
+        rem += 1
+    return tuple(int(q) for q in quotas)
 
 
 def _sid_rows(sq: Optional[jax.Array], b: int) -> jax.Array:
     return jnp.zeros((b,), jnp.int32) if sq is None else sq.astype(jnp.int32)
 
 
-def push_batch(
+# --------------------------------------------------------------------- #
+# write-slot selection: the policy layer
+# --------------------------------------------------------------------- #
+def select_write_slots(
     state: WindowState,
-    q: jax.Array,
-    tq: jax.Array,
-    uq: jax.Array,
+    b: int,
+    n_valid: jax.Array,
+    t_max: jax.Array,
+    tau: float,
     sq: Optional[jax.Array] = None,
-) -> WindowState:
+    eviction: str = "oldest",
+    quotas: Optional[jax.Array] = None,
+):
+    """Pure, scan-carryable write-slot selection for one micro-batch.
+
+    Returns ``(dest, new_cursor, new_lane_cursor, self_evicted)``:
+    ``dest (b,) i32`` is each row's slot with ``capacity`` as the
+    out-of-bounds drop sentinel (scan padding, and quota rows whose slot a
+    later same-batch row reclaims); ``self_evicted (b,) bool`` marks those
+    reclaimed rows — arrivals evicted before ever being written, which the
+    caller must count as live-slot overflow attributed to the row's own
+    stream.  No two rows of a micro-batch ever select the same slot.
+
+    Slot selection never affects *join* results (the join masks by uid and
+    stream, not by slot); it decides only which item a wrapped ring
+    evicts.  ``"oldest"``/``"dead"`` advance the shared cursor and are
+    split-invariant across micro-batch boundaries (``"dead"`` whenever the
+    writes land on dead slots — the non-overflow regime); ``"quota"``
+    advances only the per-stream cursor lanes.
+    """
     cap = state.ts.shape[0]
-    b = q.shape[0]
-    pos = (state.cursor + jnp.arange(b, dtype=jnp.int32)) % cap
-    return state._replace(
-        vecs=state.vecs.at[pos].set(q.astype(state.vecs.dtype)),
-        ts=state.ts.at[pos].set(tq.astype(jnp.float32)),
-        uids=state.uids.at[pos].set(uq.astype(jnp.int32)),
-        cursor=(state.cursor + b) % cap,
-        sids=None if state.sids is None
-        else state.sids.at[pos].set(_sid_rows(sq, b)),
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    lanes = jnp.arange(b, dtype=jnp.int32)
+    valid = lanes < n_valid
+    no_evict = jnp.zeros((b,), bool)
+    if b == 0:
+        return lanes, state.cursor, state.lane_cursor, no_evict
+
+    if eviction == "oldest":
+        pos = (state.cursor + lanes) % cap
+        dest = jnp.where(valid, pos, cap).astype(jnp.int32)
+        new_cursor = (state.cursor + n_valid) % cap
+        return dest, new_cursor, state.lane_cursor, no_evict
+
+    if eviction == "dead":
+        # dead = empty, or expired relative to the newest arrival's horizon
+        dead = (state.uids < 0) | (t_max - state.ts > tau)
+        rolled = jnp.roll(dead, -state.cursor)          # cyclic from cursor
+        cum_dead = jnp.cumsum(rolled.astype(jnp.int32))
+        cum_live = jnp.cumsum(jnp.logical_not(rolled).astype(jnp.int32))
+        n_dead = cum_dead[-1]
+        # row i → (i+1)-th dead slot in cursor order; overflow rows → the
+        # (i−n_dead+1)-th live slot (cursor order ≈ oldest-first).  Both are
+        # binary searches over a monotone count vector — a gather, no sort.
+        dead_idx = jnp.searchsorted(cum_dead, lanes + 1).astype(jnp.int32)
+        live_idx = jnp.searchsorted(cum_live, lanes - n_dead + 1).astype(jnp.int32)
+        rolled_pos = jnp.where(lanes < n_dead, dead_idx, live_idx)
+        pos = (rolled_pos + state.cursor) % cap
+        dest = jnp.where(valid, pos, cap).astype(jnp.int32)
+        last = rolled_pos[jnp.maximum(n_valid.astype(jnp.int32) - 1, 0)]
+        new_cursor = jnp.where(
+            n_valid > 0, (state.cursor + last + 1) % cap, state.cursor
+        )
+        return dest, new_cursor, state.lane_cursor, no_evict
+
+    if eviction == "quota":
+        if quotas is None or state.lane_cursor is None:
+            raise ValueError(
+                "quota eviction needs a quota table and a lane_cursor state "
+                "(init_window(..., n_lanes=K, eviction='quota'))"
+            )
+        k_tab = quotas.shape[0]
+        offs = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(quotas)[:-1].astype(jnp.int32)]
+        )
+        # clip BEFORE ranking: an out-of-range sid aliases to its clipped
+        # lane everywhere (rank, cursor, destination), so two rows can
+        # never agree on a slot while disagreeing on a rank
+        k = jnp.clip(_sid_rows(sq, b), 0, k_tab - 1)
+        qk = quotas[k]                                   # (b,) sub-ring sizes
+        base = state.lane_cursor[k]
+        # rank among this stream's valid rows of the micro-batch: positions
+        # inside the sub-ring are base + rank (mod quota), so rows of one
+        # stream fill its sub-ring in admission order
+        same = (k[:, None] == k[None, :]) & valid[:, None] & valid[None, :]
+        rank = jnp.sum(jnp.tril(same, -1), axis=1)
+        count = jnp.sum(same, axis=1)                    # incl. the row itself
+        pos = offs[k] + (base + rank) % qk
+        # if one stream wraps its own sub-ring within a single micro-batch,
+        # the newest writer of each slot wins; earlier rows are evicted
+        # before ever being written (self_evicted — counted by the caller)
+        survives = rank >= count - qk
+        dest = jnp.where(valid & survives, pos, cap).astype(jnp.int32)
+        counts_k = jnp.zeros((k_tab,), jnp.int32).at[k].add(
+            valid.astype(jnp.int32)
+        )
+        new_lane_cursor = (state.lane_cursor + counts_k) % quotas
+        return dest, state.cursor, new_lane_cursor, valid & ~survives
+
+    raise ValueError(
+        f"eviction must be one of {EVICTION_POLICIES}, got {eviction!r}"
     )
 
 
-def push_batch_masked(
+def _apply_writes(
     state: WindowState,
+    dest: jax.Array,
     q: jax.Array,
     tq: jax.Array,
     uq: jax.Array,
-    n_valid: jax.Array,
-    sq: Optional[jax.Array] = None,
+    sq: Optional[jax.Array],
+    new_cursor: jax.Array,
+    new_lane_cursor: Optional[jax.Array],
 ) -> WindowState:
-    """Push only the first ``n_valid`` rows (the rest are scan padding).
-
-    Writes for invalid rows are routed out of bounds and dropped, and the
-    cursor advances by ``n_valid`` — a padded micro-batch therefore leaves
-    the ring byte-identical to an unpadded push of the valid prefix, which
-    is what makes results invariant to the micro-batch split (tested by
-    ``test_engine.py::test_scan_carry_determinism``).
-    """
-    cap = state.ts.shape[0]
+    """Scatter one micro-batch to its selected slots (``dest == capacity``
+    rows are routed out of bounds and dropped)."""
     b = q.shape[0]
-    lanes = jnp.arange(b, dtype=jnp.int32)
-    pos = (state.cursor + lanes) % cap
-    dest = jnp.where(lanes < n_valid, pos, cap)   # cap is OOB → dropped
     return state._replace(
         vecs=state.vecs.at[dest].set(q.astype(state.vecs.dtype), mode="drop"),
         ts=state.ts.at[dest].set(tq.astype(jnp.float32), mode="drop"),
         uids=state.uids.at[dest].set(uq.astype(jnp.int32), mode="drop"),
-        cursor=(state.cursor + n_valid.astype(jnp.int32)) % cap,
+        cursor=new_cursor,
         sids=None if state.sids is None
         else state.sids.at[dest].set(_sid_rows(sq, b), mode="drop"),
+        lane_cursor=new_lane_cursor,
     )
 
 
@@ -126,20 +290,46 @@ def push_with_overflow(
     t_max: jax.Array,
     tau: float,
     sq: Optional[jax.Array] = None,
+    eviction: str = "oldest",
+    quotas: Optional[jax.Array] = None,
 ) -> WindowState:
-    """Masked push that also counts live-slot overwrites.
+    """Policy-driven masked push that also counts live-slot overwrites.
 
     A slot is *live* if it holds a real item (uid ≥ 0) still within the
     horizon ``tau`` of the newest arrival ``t_max``; overwriting one means
-    the window is undersized and emission becomes best-effort, so the
-    ``overflow`` counter records it for the operator.
+    the window is undersized for this policy and emission becomes
+    best-effort, so the ``overflow`` counter records it — and, when the
+    state carries lanes, ``lane_overflow`` charges it to the **victim**'s
+    stream (under ``"quota"`` the victim is always the writer's own
+    stream, which is the isolation guarantee).
     """
     cap = state.ts.shape[0]
-    lanes = jnp.arange(q.shape[0], dtype=jnp.int32)
-    valid = lanes < n_valid
-    pos = (state.cursor + lanes) % cap
-    live = valid & (state.uids[pos] >= 0) & (t_max - state.ts[pos] <= tau)
-    new_state = push_batch_masked(state, q, tq, uq, n_valid, sq=sq)
+    b = q.shape[0]
+    dest, new_cursor, new_lane, self_evicted = select_write_slots(
+        state, b, n_valid, t_max, tau, sq=sq, eviction=eviction, quotas=quotas,
+    )
+    read = jnp.minimum(dest, cap - 1)
+    live = (
+        (dest < cap)
+        & (state.uids[read] >= 0)
+        & (t_max - state.ts[read] <= tau)
+    )
+    lost = live | self_evicted
+    new_state = _apply_writes(
+        state, dest, q, tq, uq, sq, new_cursor, new_lane
+    )
+    lane_overflow = state.lane_overflow
+    if lane_overflow is not None:
+        n_lanes = lane_overflow.shape[0]
+        victim_sid = state.sids[read] if state.sids is not None else jnp.zeros(
+            (b,), jnp.int32
+        )
+        # a self-evicted arrival is its own victim; clip pads defensively
+        victim = jnp.clip(
+            jnp.where(live, victim_sid, _sid_rows(sq, b)), 0, n_lanes - 1
+        )
+        lane_overflow = lane_overflow.at[victim].add(lost.astype(jnp.int32))
     return new_state._replace(
-        overflow=state.overflow + jnp.sum(live.astype(jnp.int32))
+        overflow=state.overflow + jnp.sum(lost.astype(jnp.int32)),
+        lane_overflow=lane_overflow,
     )

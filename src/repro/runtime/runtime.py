@@ -102,7 +102,8 @@ class EngineFacade:
     facade supplies the four engine-specific pieces:
 
       * **construct** — :meth:`init_state` / :meth:`init_telemetry` build
-        the window state (with the ``sids`` lane) and the telemetry carry;
+        the window state (with the ``sids`` lane and the per-tenant policy
+        lanes, DESIGN.md §11) and the telemetry carry;
       * **step** — :meth:`make_step` builds the jitted stream-tagged batch
         step ``(state, telem, qs, tqs, uqs, sqs, nvs) → (state, telem,
         bufs, masks)``;
@@ -112,7 +113,7 @@ class EngineFacade:
         (e.g. per-shard liveness) under the same keys both engines use.
     """
 
-    def init_state(self, cfg: EngineConfig):
+    def init_state(self, cfg: EngineConfig, table: TenantTable):
         raise NotImplementedError
 
     def init_telemetry(self, cfg: EngineConfig):
@@ -136,8 +137,13 @@ class EngineFacade:
 class SingleDeviceFacade(EngineFacade):
     """Default facade: one ring window on one device."""
 
-    def init_state(self, cfg: EngineConfig):
-        return init_window(cfg.capacity, cfg.d)
+    def init_state(self, cfg: EngineConfig, table: TenantTable):
+        # per-tenant policy lanes are always materialized in the runtime:
+        # overflow attribution is per-victim-stream under every policy
+        return init_window(
+            cfg.capacity, cfg.d, n_lanes=table.n_tenants,
+            eviction=cfg.eviction,
+        )
 
     def init_telemetry(self, cfg: EngineConfig):
         return init_telemetry()
@@ -168,8 +174,10 @@ class ShardedFacade(EngineFacade):
         self.axis = axis or window_axis(mesh, rules)
         self.n_shards = int(mesh.shape[self.axis])
 
-    def init_state(self, cfg: EngineConfig):
-        return init_sharded_window(cfg, self.mesh, self.axis)
+    def init_state(self, cfg: EngineConfig, table: TenantTable):
+        return init_sharded_window(
+            cfg, self.mesh, self.axis, n_lanes=table.n_tenants
+        )
 
     def init_telemetry(self, cfg: EngineConfig):
         # lanes 0..n-1 per shard + lane n for the global-merge correction
@@ -206,10 +214,12 @@ def make_tenant_batch_step(
     are donated.
     """
     tau = table.tau_max
+    quo = cfg.quotas_device()
 
     def ingest(state, q, tq, uq, n_valid, t_max, sq):
         return push_with_overflow(
-            state, q, tq, uq, n_valid, t_max, tau, sq=sq
+            state, q, tq, uq, n_valid, t_max, tau, sq=sq,
+            eviction=cfg.eviction, quotas=quo,
         )
 
     if fused is None:
@@ -287,6 +297,11 @@ class MultiTenantRuntime(StreamEngineBase):
                 f"fused embedder d_model ({fused.model_cfg.d_model}) must "
                 f"equal EngineConfig.d ({cfg.d})"
             )
+        if cfg.quotas is not None and len(cfg.quotas) != table.n_tenants:
+            raise ValueError(
+                f"quota table has {len(cfg.quotas)} entries but the tenant "
+                f"table has {table.n_tenants} streams"
+            )
         if span < 1:
             raise ValueError("span must be ≥ 1")
         super().__init__(cfg)
@@ -297,7 +312,7 @@ class MultiTenantRuntime(StreamEngineBase):
         self.router = RequestRouter(
             table.n_tenants, max_queue_per_tenant=max_queue_per_tenant
         )
-        self.state = self.engine.init_state(cfg)
+        self.state = self.engine.init_state(cfg, table)
         self.telem = self.engine.init_telemetry(cfg)
         self._step = self.engine.make_step(cfg, table, fused)
         # uid → tenant map: a doubling-growth append buffer (4 B per item
@@ -509,12 +524,21 @@ class MultiTenantRuntime(StreamEngineBase):
     def tenant_stats(self, tenant: int) -> dict:
         tenant = self.table.validate_id(tenant)
         th, lm = self.table.spec(tenant)
+        by_tenant = self.overflow_by_tenant
         return {
             "theta": th,
             "lam": lm,
             "submitted": self.submitted_by_tenant[tenant],
             "queued": self.router.queued_by_tenant[tenant],
             "pairs_drained": self.pairs_by_tenant[tenant],
+            # this tenant's live items lost to overwrite (victim-side
+            # attribution, DESIGN.md §11) — no longer the global-only count
+            "window_overflow": int(by_tenant[tenant]),
+            "quota": (
+                None if self.cfg.quotas is None
+                else int(self.cfg.quotas[tenant])
+                * self.engine.global_capacity(self.cfg) // self.cfg.capacity
+            ),
         }
 
     def _global_capacity(self) -> int:
@@ -526,6 +550,7 @@ class MultiTenantRuntime(StreamEngineBase):
         return {
             **super().stats(),
             **self.engine.stats_extra(self.state, self.telem),
+            "eviction": self.cfg.eviction,
             "n_tenants": self.table.n_tenants,
             "items_queued": len(self.router),
             "items_rejected": rt.items_rejected,

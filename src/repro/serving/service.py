@@ -18,11 +18,12 @@ structurally impossible on the host too.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Hashable, List, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..engine.engine import EngineConfig, StreamEngine
+from ..engine.window import quota_partition
 from ..runtime import (
     FusedEmbedder,
     MultiTenantRuntime,
@@ -184,6 +185,15 @@ class MultiTenantSSSJService:
     (DESIGN.md §10): ``capacity`` stays the *total* window size, split
     evenly across the mesh's window-axis shards; emissions — and therefore
     groups — are identical to the single-device run.
+
+    ``eviction`` selects the window's write-slot policy (DESIGN.md §11):
+    ``"oldest"`` (default), ``"dead"`` (reuse expired slots first), or
+    ``"quota"`` — a static partition of the window into per-tenant
+    sub-rings, so a bursty tenant can only evict its own items.
+    ``quotas`` gives each tenant's **total** slot count (summing to
+    ``capacity``; default: split by equal weights); on a mesh every quota
+    must also divide evenly across the shards, because sub-rings stay
+    shard-local.
     """
 
     def __init__(
@@ -198,8 +208,11 @@ class MultiTenantSSSJService:
         max_queue_per_tenant: int = 65536,
         fused: Optional[FusedEmbedder] = None,
         mesh=None,
+        eviction: str = "oldest",
+        quotas: Optional[Sequence[int]] = None,
     ) -> None:
         engine = None
+        n = 1
         if mesh is not None:
             engine = ShardedFacade(mesh)
             n = engine.n_shards
@@ -217,7 +230,40 @@ class MultiTenantSSSJService:
                     f"{n} shards); raise capacity to ≥ {micro_batch * n} "
                     f"or lower micro_batch"
                 )
-            capacity //= n
+        if eviction == "quota" and quotas is None:
+            # partition per shard and scale back up, so the default split
+            # always passes the shard-divisibility check below
+            quotas = tuple(
+                q * n
+                for q in quota_partition(capacity // n, [1.0] * table.n_tenants)
+            )
+        if quotas is not None:
+            # per-tenant quota validation happens here, against the caller's
+            # TOTAL capacity, before anything is divided per shard
+            if eviction != "quota":
+                raise ValueError(
+                    f"quotas are only meaningful under eviction='quota' "
+                    f"(got eviction={eviction!r})"
+                )
+            quotas = [int(q) for q in quotas]
+            if len(quotas) != table.n_tenants:
+                raise ValueError(
+                    f"{len(quotas)} quotas for {table.n_tenants} tenants"
+                )
+            if min(quotas) < 1:
+                raise ValueError(f"every tenant needs ≥ 1 slot, got {quotas}")
+            if sum(quotas) != capacity:
+                raise ValueError(
+                    f"quotas sum to {sum(quotas)}, not capacity {capacity}"
+                )
+            bad = [q for q in quotas if q % n]
+            if bad:
+                raise ValueError(
+                    f"quotas {bad} not divisible by {n} window shards "
+                    f"(sub-rings are shard-local)"
+                )
+            quotas = tuple(q // n for q in quotas)
+        capacity //= n
         th0, lm0 = table.spec(0)
         cfg = EngineConfig(
             theta=th0, lam=lm0, capacity=capacity, d=dim,
@@ -225,6 +271,7 @@ class MultiTenantSSSJService:
             tile_k=tile_k or micro_batch * micro_batch,
             block_q=micro_batch, block_w=micro_batch,
             chunk_d=min(dim, 128),
+            eviction=eviction, quotas=quotas,
         )
         self.runtime = MultiTenantRuntime(
             cfg, table, span=span,

@@ -2,8 +2,9 @@
 
 One parametrized grid — engine ∈ {single, sharded×{2,4}} × level-1 impl ∈
 {pallas, scan, dense} × tenants ∈ {None, K=8} × ring {wrapped, unwrapped}
-× emission {lossless, overflow} — asserting the one contract every
-current and future engine variant must satisfy (DESIGN.md §8/§10):
+× emission {lossless, overflow} × eviction policy {oldest, dead, quota} —
+asserting the one contract every current and future engine variant must
+satisfy (DESIGN.md §8/§10/§11):
 
   * **exactness** — with no drop counter firing, the emitted pair set
     equals the dense-oracle brute force pair-for-pair (per tenant on the
@@ -18,7 +19,15 @@ current and future engine variant must satisfy (DESIGN.md §8/§10):
     a valid oracle;
   * **invariance** — per-tenant emissions are identical across shard
     counts (P ∈ {1, 2, 4}) and coalescing plans, because uids assign at
-    admission and the round-robin deal is uid-ordered.
+    admission and the round-robin deal is uid-ordered;
+  * **policy conformance** — ``oldest`` cells are byte-identical to the
+    pre-policy ring (numpy reference simulation: same slots, cursor, and
+    overflow counter); every policy stays pinned to the dense oracle
+    whenever its overflow counters are zero; ``window_overflow_by_tenant``
+    sums exactly to ``window_overflow``; and the **quota isolation
+    invariant** — a bursty tenant at 10× rate cannot change a
+    within-quota tenant's emitted pair set, while ``oldest`` demonstrably
+    loses pairs on the same traffic (DESIGN.md §11).
 
 Sharded cells run in-process when the session already has enough devices
 (the CI multi-device leg forces 8 host devices) and fall back to a
@@ -37,6 +46,7 @@ import sys
 import numpy as np
 import pytest
 
+from repro.data.synth import bursty_tenant_traffic
 from repro.engine import EngineConfig, ShardedStreamEngine, StreamEngine
 from repro.runtime import MultiTenantRuntime, ShardedFacade, TenantTable
 
@@ -62,12 +72,20 @@ MODES = [
 ]
 
 
-def _cfg(impl: str, cap_total: int, overflow: bool, shards: int) -> EngineConfig:
+def _cfg(
+    impl: str, cap_total: int, overflow: bool, shards: int,
+    eviction: str = "oldest", n_streams: int = 1,
+) -> EngineConfig:
+    quotas = None
+    if eviction == "quota":
+        # equal static split of the per-shard ring (sub-rings shard-local)
+        quotas = (cap_total // shards // n_streams,) * n_streams
     return EngineConfig(
         theta=0.8, lam=0.05, capacity=cap_total // shards, d=D,
         micro_batch=MB, max_pairs=2 if overflow else 4096,
         tile_k=MB * MB,            # block² — level 1 is lossless by design
         block_q=MB, block_w=MB, chunk_d=32, join_impl=impl,
+        eviction=eviction, quotas=quotas,
     )
 
 
@@ -123,6 +141,9 @@ def _check(got: dict, truth: dict, stats: dict, overflow: bool, label):
     """The conformance contract shared by every cell."""
     assert truth, f"{label}: vacuous cell — no true pairs"
     assert stats["window_overflow"] == 0, label
+    by_tenant = stats.get("window_overflow_by_tenant")
+    if by_tenant is not None:     # lane sums match the global counter
+        assert sum(by_tenant) == stats["window_overflow"], label
     assert stats["pairs_dropped"] == (
         stats["pairs_dropped_budget"] + stats["pairs_dropped_tile"]
     ), label
@@ -147,13 +168,18 @@ def _mesh(shards: int):
     return jax.make_mesh((shards,), ("data",))
 
 
-def run_cell(impl: str, tenants, shards: int, mode: str) -> None:
+def run_cell(
+    impl: str, tenants, shards: int, mode: str, eviction: str = "oldest"
+) -> None:
     """One conformance cell; raises AssertionError on contract violation."""
-    label = (impl, tenants, shards, mode)
+    label = (impl, tenants, shards, mode, eviction)
     cap_total, overflow = next(
         (c, o) for m, c, o in MODES if m == mode
     )
-    cfg = _cfg(impl, cap_total, overflow, shards)
+    cfg = _cfg(
+        impl, cap_total, overflow, shards, eviction,
+        n_streams=K if tenants else 1,
+    )
     if tenants is None:
         vecs, ts = _dup_stream(N_SINGLE, seed=29, dup_frac=0.4)
         truth = _truth(vecs, ts, cfg.theta, cfg.lam)
@@ -203,16 +229,18 @@ def run_cell(impl: str, tenants, shards: int, mode: str) -> None:
         assert sum(stats["shards"]["window_overflow"]) == 0
 
 
-def run_cells(impl: str, tenants, shards: int) -> None:
+def run_cells(impl: str, tenants, shards: int, eviction: str = "oldest") -> None:
     for mode, _, _ in MODES:
-        run_cell(impl, tenants, shards, mode)
+        run_cell(impl, tenants, shards, mode, eviction)
 
 
-def _subprocess_cells(impl: str, tenants, shards: int) -> None:
+def _subprocess_cells(
+    impl: str, tenants, shards: int, eviction: str = "oldest"
+) -> None:
     code = (
         f"import sys; sys.path.insert(0, {_TESTS!r})\n"
         f"from test_conformance import run_cells\n"
-        f"run_cells({impl!r}, {tenants!r}, {shards})\n"
+        f"run_cells({impl!r}, {tenants!r}, {shards}, {eviction!r})\n"
     )
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -248,6 +276,181 @@ def test_conformance_sharded(shards, impl, tenants):
         run_cells(impl, tenants, shards)
     else:
         _subprocess_cells(impl, tenants, shards)
+
+
+# --------------------------------------------------------------------- #
+# eviction-policy axis (DESIGN.md §11): every policy stays pinned to the
+# dense oracle whenever its overflow counters are zero
+# --------------------------------------------------------------------- #
+EVICTIONS = ["dead", "quota"]          # "oldest" is every cell above
+
+
+@pytest.mark.parametrize("eviction", EVICTIONS)
+@pytest.mark.parametrize("tenants", TENANTS, ids=["single-stream", f"K{K}"])
+@pytest.mark.parametrize("impl", IMPLS)
+def test_conformance_eviction_policies(impl, tenants, eviction):
+    """The wrapped ring is where policies actually differ — the write
+    path reuses/partitions slots — yet with zero overflow every policy
+    must emit the identical oracle pair set."""
+    run_cell(impl, tenants, 1, "wrapped", eviction)
+
+
+@pytest.mark.parametrize("eviction", EVICTIONS)
+@pytest.mark.parametrize("mode", ["unwrapped", "overflow"])
+def test_conformance_eviction_modes(eviction, mode):
+    run_cell("scan", K, 1, mode, eviction)
+
+
+@pytest.mark.parametrize("eviction", EVICTIONS)
+def test_conformance_eviction_sharded(eviction):
+    """Policies compose with the shard_map fan-out: quota sub-rings are
+    shard-local and the quota table rides the in_specs replicated."""
+    import jax
+
+    if jax.device_count() >= 2:
+        run_cells("scan", K, 2, eviction)
+    else:
+        _subprocess_cells("scan", K, 2, eviction)
+
+
+def test_oldest_ring_byte_identical_to_prerefactor():
+    """Tentpole acceptance: the default policy's ring is byte-identical
+    to the pre-refactor oldest-first overwrite — same slot contents, same
+    cursor, same overflow counter — against a numpy reference that
+    implements the old `push_with_overflow` verbatim."""
+    cfg = _cfg("scan", CAP_WRAPPED, False, 1)
+    eng = StreamEngine(cfg)
+    vecs, ts = _dup_stream(N_SINGLE, seed=29, dup_frac=0.4)
+    cap, mb, tau = cfg.capacity, cfg.micro_batch, cfg.tau
+    ref_v = np.zeros((cap, D), np.float32)
+    ref_t = np.full(cap, 3.0e30, np.float32)
+    ref_u = np.full(cap, -1, np.int32)
+    cur = ovf = uid = 0
+    for i in range(0, N_SINGLE, 80):
+        eng.push(vecs[i:i + 80], ts[i:i + 80])
+        for j in range(i, min(i + 80, N_SINGLE), mb):   # push sizes are
+            # multiples of mb (80, 80, 32) — no padding path here
+            pos = (cur + np.arange(mb)) % cap
+            t_max = np.float32(ts[j:j + mb].max())
+            ovf += int(
+                ((ref_u[pos] >= 0) & (t_max - ref_t[pos] <= tau)).sum()
+            )
+            ref_v[pos] = vecs[j:j + mb]
+            ref_t[pos] = ts[j:j + mb].astype(np.float32)
+            ref_u[pos] = np.arange(uid, uid + mb, dtype=np.int32)
+            cur = (cur + mb) % cap
+            uid += mb
+    eng.drain_arrays()                            # sync
+    np.testing.assert_array_equal(np.asarray(eng.state.vecs), ref_v)
+    np.testing.assert_array_equal(np.asarray(eng.state.ts), ref_t)
+    np.testing.assert_array_equal(np.asarray(eng.state.uids), ref_u)
+    assert int(eng.state.cursor) == cur
+    assert int(eng.state.overflow) == ovf
+
+
+# --------------------------------------------------------------------- #
+# quota isolation invariant (tentpole acceptance): a bursty tenant at 10×
+# rate cannot change a within-quota tenant's emitted pair set — while
+# oldest-first demonstrably loses the same pairs on the same traffic
+# --------------------------------------------------------------------- #
+BK = 4                     # one bursty + three slow tenants
+B_THETAS = [0.9, 0.8, 0.8, 0.8]
+B_LAMS = [2.0, 0.1, 0.1, 0.1]     # slow τ ≈ 2.23; bursty τ ≈ 0.05
+B_CAP = 32                 # total ring slots — one round overruns it
+B_MB = 16
+B_ROUNDS = 10
+# bursty items per round ≫ 10× the slow tenants' 3: each round's 48
+# arrivals exceed capacity + micro-batch ingest lag (32 + 15), so under
+# oldest-first nothing from round r survives to round r+1's queries
+B_BURST = 45
+
+
+def _run_bursty(impl: str, shards: int, eviction: str):
+    """Drive the bursty traffic through one engine cell; returns each
+    slow tenant's local pair set, the per-tenant truth, and stats."""
+    table = TenantTable(B_THETAS, B_LAMS)
+    quotas = (
+        (B_CAP // shards // BK,) * BK if eviction == "quota" else None
+    )
+    cfg = EngineConfig(
+        theta=0.8, lam=0.1, capacity=B_CAP // shards, d=D, micro_batch=B_MB,
+        max_pairs=4096, tile_k=B_MB * B_MB, block_q=B_MB, block_w=B_MB,
+        chunk_d=32, join_impl=impl, eviction=eviction, quotas=quotas,
+    )
+    engine = None if shards == 1 else ShardedFacade(_mesh(shards))
+    rt = MultiTenantRuntime(cfg, table, span=2, engine=engine)
+    # the canonical flood stream (slow reposts every 1.5 units — each
+    # consecutive pair within τ, the next-but-one outside it; per-round
+    # arrivals exceed the whole ring so oldest-first evicts live items)
+    submits, per_tenant = bursty_tenant_traffic(BK - 1, B_ROUNDS, B_BURST, D)
+    local_of = [dict() for _ in range(BK)]
+    counts = [0] * BK
+    for k, v, t in submits:
+        uids = rt.submit(k, v, t)
+        for u in uids.tolist():
+            local_of[k][u] = counts[k]
+            counts[k] += 1
+    rt.flush(final=True)
+    per = rt.drain_by_tenant()
+    got = []
+    for k in range(BK):
+        ua, ub, _ = per[k][:3]
+        got.append({
+            tuple(sorted((local_of[k][a], local_of[k][b])))
+            for a, b in zip(ua.tolist(), ub.tolist())
+        })
+    truth = [
+        set(_truth(*per_tenant[k], B_THETAS[k], B_LAMS[k]).keys())
+        for k in range(BK)
+    ]
+    return got, truth, rt.stats()
+
+
+def run_quota_isolation(impl: str, shards: int) -> None:
+    got_q, truth, sq = _run_bursty(impl, shards, "quota")
+    got_o, _, so = _run_bursty(impl, shards, "oldest")
+    for k in range(1, BK):
+        assert truth[k], (impl, shards, k)   # non-vacuous: pairs exist
+        # the invariant: within-quota tenants emit their exact truth, and
+        # none of their live items were ever overwritten
+        assert got_q[k] == truth[k], (impl, shards, k)
+    by_q = sq["window_overflow_by_tenant"]
+    by_o = so["window_overflow_by_tenant"]
+    assert sum(by_q) == sq["window_overflow"]
+    assert sum(by_o) == so["window_overflow"]
+    assert sum(by_q[1:]) == 0, by_q          # quota: slow tenants untouched
+    # non-vacuity: oldest-first did evict slow tenants' live items and
+    # lost some of their pairs on the identical traffic
+    assert sum(by_o[1:]) > 0, by_o
+    lost = [truth[k] - got_o[k] for k in range(1, BK)]
+    assert any(lost), (impl, shards)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_quota_isolation_single_device(impl):
+    run_quota_isolation(impl, 1)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_quota_isolation_sharded(impl):
+    import jax
+
+    if jax.device_count() >= 2:
+        run_quota_isolation(impl, 2)
+        return
+    code = (
+        f"import sys; sys.path.insert(0, {_TESTS!r})\n"
+        f"from test_conformance import run_quota_isolation\n"
+        f"run_quota_isolation({impl!r}, 2)\n"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
 
 
 # --------------------------------------------------------------------- #

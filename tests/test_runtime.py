@@ -190,6 +190,59 @@ def test_overflow_counters_sum_exact_per_level():
             assert got <= truths[k]
 
 
+def test_window_overflow_attributed_per_tenant():
+    """Satellite: live-slot overwrites are charged to the *victim* stream
+    — ``window_overflow_by_tenant`` sums exactly to ``window_overflow``,
+    and ``tenant_stats`` surfaces each tenant's own count instead of the
+    old global-only counter."""
+    table = TenantTable.uniform(3, 0.9, 0.01)   # τ ≈ 10.5: everything lives
+    rt = MultiTenantRuntime(_cfg(capacity=32, micro_batch=32), table, span=1)
+    rng = np.random.default_rng(9)
+
+    def vecs(n):
+        v = rng.standard_normal((n, D)).astype(np.float32)
+        return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+    # fill the 32-slot ring: 16 items of tenant 1, 16 of tenant 2
+    rt.submit(1, vecs(16), np.linspace(0.0, 0.15, 16))
+    rt.submit(2, vecs(16), np.linspace(0.2, 0.35, 16))
+    rt.flush()
+    assert rt.stats()["window_overflow"] == 0
+    # tenant 0 floods 32 more: every write overwrites a live victim
+    rt.submit(0, vecs(32), np.linspace(0.4, 0.7, 32))
+    rt.flush()
+    s = rt.stats()
+    assert s["window_overflow"] == 32
+    assert s["window_overflow_by_tenant"] == [0, 16, 16]
+    assert sum(s["window_overflow_by_tenant"]) == s["window_overflow"]
+    for t, want in enumerate([0, 16, 16]):
+        assert rt.tenant_stats(t)["window_overflow"] == want
+    # and the perpetrator's next flood evicts only itself
+    rt.submit(0, vecs(32), np.linspace(0.8, 1.1, 32))
+    rt.flush()
+    s = rt.stats()
+    assert s["window_overflow"] == 64
+    assert s["window_overflow_by_tenant"] == [32, 16, 16]
+
+
+def test_quota_runtime_validation():
+    """Quota plumbing: the table length must match the tenant count, and
+    tenant_stats reports each tenant's slot quota."""
+    table = TenantTable.uniform(2, 0.9, 0.1)
+    with pytest.raises(ValueError):
+        MultiTenantRuntime(
+            _cfg(eviction="quota", quotas=(256, 256, 512)), table
+        )
+    with pytest.raises(ValueError):                 # sum != capacity
+        _cfg(eviction="quota", quotas=(100, 100))
+    with pytest.raises(ValueError):                 # quotas without policy
+        _cfg(quotas=(512, 512))
+    rt = MultiTenantRuntime(_cfg(eviction="quota", quotas=(256, 768)), table)
+    assert rt.tenant_stats(0)["quota"] == 256
+    assert rt.tenant_stats(1)["quota"] == 768
+    assert rt.stats()["eviction"] == "quota"
+
+
 def test_match_masks_ride_per_tenant():
     streams, events = _tenant_streams(n_per=48)
     table = TenantTable(THETAS, LAMS)
