@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.synth import dense_embedding_stream
+from repro.data.synth import StreamSpec, dense_embedding_stream, synthetic_stream
 from repro.engine import EngineConfig, StreamEngine
 from repro.engine.window import init_window, push_with_overflow
 from repro.kernels.sssj_join import (
@@ -54,8 +54,9 @@ from repro.kernels.sssj_join import (
     sssj_join_scores,
     tile_candidates,
 )
+from repro.obs import publish_counters
 
-from .common import Row
+from .common import Row, run_config
 
 JSON_PATH = "BENCH_engine.json"
 
@@ -196,6 +197,31 @@ def run(fast: bool = True, smoke: bool = False) -> List[Row]:
     rows.append(Row("engine/pairs_dropped",
                     float(hier.engine.pairs_dropped)))
 
+    # ---- paper-counters bridge (DESIGN.md §12) ----------------------------
+    # the paper's host-side Fig. 2/6 counters (entries traversed,
+    # candidates generated, full similarities) and the device engine's
+    # telemetry, published into ONE registry and read from one snapshot
+    n_ref = 200 if smoke else 600
+    spec = StreamSpec("bridge", n_ref, 1024, 16.0, "poisson", rate=1.0)
+    _, c_ref, ref_pairs = run_config(
+        synthetic_stream(spec, seed=9), "STR", "L2", theta, 0.05
+    )
+    publish_counters(hier.engine.registry, c_ref)
+    snap = hier.engine.metrics()
+    rows.append(Row("paper/entries_traversed",
+                    float(snap["paper/entries_traversed"]),
+                    "STR × L2 reference joiner (Fig. 2/6 vocabulary)"))
+    rows.append(Row("paper/candidates_generated",
+                    float(snap["paper/candidates_generated"])))
+    rows.append(Row("paper/full_sims_computed",
+                    float(snap["paper/full_sims_computed"])))
+    rows.append(Row("paper/pairs_emitted", float(snap["paper/pairs_emitted"]),
+                    f"{ref_pairs} pairs over {n_ref} items"))
+    rows.append(Row("obs/unified_snapshot", float(
+        snap["paper/items_processed"] == n_ref
+        and snap["engine/n_items"] == 2 * n
+    ), "paper/… and engine/… coherent in one registry snapshot"))
+
     # ---- the tentpole claim: hier ≥ 2× dense at a large capacity ----------
     dense_big = _EngineDriver(cfg(cap_big, emit_dense=True, use_ref=True))
     hier_big = _EngineDriver(cfg(cap_big))
@@ -270,6 +296,14 @@ def check(rows: List[Row]) -> List[str]:
         )
     if by.get("engine/pairs_dropped", 0.0) != 0.0:
         problems.append("emission overflowed on the benchmark stream")
+    if by.get("obs/unified_snapshot") != 1.0:
+        problems.append(
+            "paper counters and engine telemetry incoherent in the unified "
+            "registry snapshot"
+        )
+    if by.get("paper/entries_traversed", 0.0) <= 0.0 or \
+            by.get("paper/full_sims_computed", 0.0) <= 0.0:
+        problems.append("paper-counters bridge published empty counters")
     if by.get("engine/hugecap/pairs_dropped", 0.0) != 0.0:
         problems.append("emission overflowed at the huge capacity")
     if not by.get("engine/smoke_mode") and by.get("engine/hier_speedup_x", 0.0) < 2.0:

@@ -41,11 +41,18 @@ overflow is *lower* under ``quota`` than under ``oldest``, and under
 ``quota`` the slow tenants' pair sets equal the brute-force truth
 (pair-set check).  ``--bursty`` writes ``BENCH_eviction.json`` by default.
 
+``--latency`` runs the open-loop arrival scenario (DESIGN.md §12):
+wall-clock Poisson arrivals replayed in real time against deadline
+flushes, with per-tenant admission→emission latency percentiles read off
+the metrics registry's log-bucket histograms.  Writes
+``BENCH_latency.json`` (including the raw global histogram).
+
 Standalone usage (CI smoke runs these):
 
     PYTHONPATH=src python -m benchmarks.runtime_throughput --smoke
     PYTHONPATH=src python -m benchmarks.runtime_throughput --smoke --shards 2
     PYTHONPATH=src python -m benchmarks.runtime_throughput --smoke --bursty
+    PYTHONPATH=src python -m benchmarks.runtime_throughput --smoke --latency
 """
 
 from __future__ import annotations
@@ -95,6 +102,7 @@ from .common import Row
 
 JSON_PATH = "BENCH_runtime.json"
 BURSTY_JSON_PATH = "BENCH_eviction.json"
+LATENCY_JSON_PATH = "BENCH_latency.json"
 
 
 def _traffic(n_tenants, rounds, per_round, d, seed=0):
@@ -334,6 +342,143 @@ def run_bursty(smoke: bool = False, shards: int = 1) -> List[Row]:
     return rows
 
 
+def _hist_delta(final: dict, base: dict) -> dict:
+    """Snapshot-form histogram delta (observations between two snapshots)."""
+    counts = [b - a for a, b in zip(base["counts"], final["counts"])]
+    return {
+        "bounds": final["bounds"],
+        "counts": counts,
+        "sum": final["sum"] - base["sum"],
+        "count": final["count"] - base["count"],
+    }
+
+
+def run_latency(smoke: bool = False):
+    """Open-loop arrival scenario: admission→emission latency histograms.
+
+    Arrivals are scheduled on a wall clock (Poisson per tenant) and
+    replayed in real time; the runtime flushes on a fixed deadline
+    (``flush(final=True)``, the latency-deadline case), so each item's
+    latency = queueing until its deadline flush + device scan + D2H copy
+    landing on the host.  Percentiles come from the registry's log-bucket
+    histograms (``latency/admit_to_emit_s``, ``tenant/<k>/latency_s``) —
+    the same metrics a scraper would see — with warmup observations
+    subtracted via a baseline snapshot.
+
+    Returns ``(rows, latency_histogram)`` — the delta histogram rides
+    into ``BENCH_latency.json`` for offline analysis.
+    """
+    from repro.obs import histogram_percentile
+
+    rows: List[Row] = []
+    if smoke:
+        n_tenants, horizon_s, rate, d, mb, cap = 4, 0.6, 400.0, 32, 16, 512
+        deadline_s = 0.02
+    else:
+        n_tenants, horizon_s, rate, d, mb, cap = 16, 3.0, 1000.0, 64, 64, 4096
+        deadline_s = 0.01
+    theta, lam = 0.8, 0.5
+    rng = np.random.default_rng(7)
+    # per-tenant Poisson arrivals over the horizon, merged into one
+    # globally time-ordered open-loop schedule
+    events = []
+    for k in range(n_tenants):
+        vecs, _ = dense_embedding_stream(
+            int(rate * horizon_s), d, seed=100 + k, rate=4.0
+        )
+        t, i = 0.0, 0
+        while True:
+            t += rng.exponential(n_tenants / rate)
+            if t >= horizon_s or i >= vecs.shape[0]:
+                break
+            events.append((t, k, vecs[i]))
+            i += 1
+    events.sort(key=lambda e: e[0])
+
+    table = TenantTable.uniform(n_tenants, theta, lam)
+    cfg = EngineConfig(
+        theta=theta, lam=lam, capacity=cap, d=d, micro_batch=mb,
+        max_pairs=8192, tile_k=mb * mb, block_q=mb, block_w=mb,
+        chunk_d=min(d, 128),
+    )
+    rt = MultiTenantRuntime(cfg, table, span=2, max_queue_per_tenant=1 << 20)
+    # warmup: one dispatch + drain compiles the (fixed-shape) step; the
+    # baseline snapshot subtracts its latency observations afterwards
+    warm = np.zeros((mb, d), np.float32)
+    warm[:, 0] = 1.0
+    rt.submit(0, warm, np.full(mb, -1e6))
+    rt.flush(final=True)
+    rt.drain_by_tenant()
+    base = rt.registry.snapshot()
+
+    t0 = time.perf_counter()
+    next_deadline = deadline_s
+    for t_sched, k, vec in events:
+        now = time.perf_counter() - t0
+        if t_sched > now:
+            time.sleep(t_sched - now)
+            now = t_sched
+        while now >= next_deadline:
+            rt.flush(final=True)
+            next_deadline += deadline_s
+            now = time.perf_counter() - t0
+        rt.submit(int(k), vec[None, :], np.asarray([t_sched]))
+    rt.flush(final=True)
+    rt.drain_by_tenant()                 # pops records → observes latency
+    snap = rt.registry.snapshot()
+
+    hist = _hist_delta(snap["latency/admit_to_emit_s"],
+                       base["latency/admit_to_emit_s"])
+    rows.append(Row("latency/smoke_mode", float(smoke)))
+    rows.append(Row("latency/n_tenants", float(n_tenants)))
+    rows.append(Row("latency/deadline_ms", deadline_s * 1e3))
+    rows.append(Row("latency/items", float(len(events)),
+                    f"open loop over {horizon_s}s"))
+    rows.append(Row("latency/observed", float(hist["count"])))
+    rows.append(Row("latency/p50_ms",
+                    histogram_percentile(hist, 0.50) * 1e3))
+    rows.append(Row("latency/p99_ms",
+                    histogram_percentile(hist, 0.99) * 1e3))
+    rows.append(Row("latency/mean_ms",
+                    hist["sum"] / max(hist["count"], 1) * 1e3))
+    for k in range(n_tenants):
+        th = _hist_delta(snap[f"tenant/{k}/latency_s"],
+                         base[f"tenant/{k}/latency_s"])
+        rows.append(Row(f"latency/tenant/{k}/observed", float(th["count"])))
+        rows.append(Row(f"latency/tenant/{k}/p50_ms",
+                        histogram_percentile(th, 0.50) * 1e3))
+        rows.append(Row(f"latency/tenant/{k}/p99_ms",
+                        histogram_percentile(th, 0.99) * 1e3))
+    for stage in ("admit", "coalesce", "h2d", "scan", "drain", "emit"):
+        rows.append(Row(f"latency/span/{stage}/time_s",
+                        snap[f"span/{stage}/time_s"],
+                        f"{snap[f'span/{stage}/calls']} calls"))
+    return rows, hist
+
+
+def check_latency(rows: List[Row]) -> List[str]:
+    by = {r.name: r.value for r in rows}
+    problems = []
+    n_items = by.get("latency/items", 0.0)
+    if by.get("latency/observed") != n_items or n_items == 0.0:
+        problems.append(
+            f"latency histogram observed {by.get('latency/observed')} of "
+            f"{n_items} admitted items"
+        )
+    p50, p99 = by.get("latency/p50_ms", 0.0), by.get("latency/p99_ms", 0.0)
+    if not 0.0 < p50 <= p99:
+        problems.append(f"degenerate percentiles (p50={p50}, p99={p99})")
+    k = 0
+    while f"latency/tenant/{k}/observed" in by:
+        if by[f"latency/tenant/{k}/observed"] == 0.0 or \
+                by[f"latency/tenant/{k}/p50_ms"] <= 0.0:
+            problems.append(f"tenant {k}: latency histogram not populated")
+        k += 1
+    if k == 0:
+        problems.append("no per-tenant latency histograms in output")
+    return problems
+
+
 def check_bursty(rows: List[Row]) -> List[str]:
     by = {r.name: r.value for r in rows}
     problems = []
@@ -416,16 +561,35 @@ def main() -> None:
                          "identical flood traffic under each eviction "
                          "policy; enforces lower slow-tenant overflow and "
                          "exact slow pair sets under quota")
+    ap.add_argument("--latency", action="store_true",
+                    help="run the open-loop arrival scenario instead: "
+                         "wall-clock Poisson arrivals, deadline flushes, "
+                         "per-tenant admission→emission latency histograms "
+                         "from the metrics registry (DESIGN.md §12)")
     ap.add_argument("--json", default=None,
-                    help=f"machine-readable output path (default {JSON_PATH}, "
-                         f"{BURSTY_JSON_PATH} with --bursty)")
+                    help=f"machine-readable output path (default {JSON_PATH}; "
+                         f"{BURSTY_JSON_PATH} with --bursty, "
+                         f"{LATENCY_JSON_PATH} with --latency)")
     args = ap.parse_args()
-    json_path = args.json or (BURSTY_JSON_PATH if args.bursty else JSON_PATH)
+    if args.bursty and args.latency:
+        ap.error("--bursty and --latency are mutually exclusive scenarios")
+    json_path = args.json or (
+        BURSTY_JSON_PATH if args.bursty
+        else LATENCY_JSON_PATH if args.latency
+        else JSON_PATH
+    )
     t0 = time.time()
+    latency_hist = None
     if args.bursty:
+        benchmark = "runtime_throughput_bursty"
         rows = run_bursty(smoke=args.smoke, shards=args.shards)
         problems = check_bursty(rows)
+    elif args.latency:
+        benchmark = "runtime_latency"
+        rows, latency_hist = run_latency(smoke=args.smoke)
+        problems = check_latency(rows)
     else:
+        benchmark = "runtime_throughput"
         rows = run(fast=not args.full, smoke=args.smoke, shards=args.shards,
                    eviction=args.eviction)
         problems = check(rows)
@@ -433,9 +597,7 @@ def main() -> None:
     for r in rows:
         print(r.csv())
     payload = {
-        "benchmark": (
-            "runtime_throughput_bursty" if args.bursty else "runtime_throughput"
-        ),
+        "benchmark": benchmark,
         "mode": "smoke" if args.smoke else ("fast" if not args.full else "full"),
         "shards": args.shards,
         "eviction": "all" if args.bursty else args.eviction,
@@ -443,6 +605,8 @@ def main() -> None:
         "rows": [dict(name=r.name, value=r.value, extra=r.extra) for r in rows],
         "problems": problems,
     }
+    if latency_hist is not None:
+        payload["latency_histogram"] = latency_hist
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"# wrote {json_path} ({len(rows)} rows) in {payload['elapsed_s']}s")

@@ -27,7 +27,9 @@ from .sharded import (  # noqa: F401
     ShardedStreamEngine,
     init_sharded_window,
     make_sharded_batch_step,
+    shard_metrics,
     shard_stats,
+    shard_view,
     window_axis,
 )
 from .window import (  # noqa: F401

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import time
 from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -51,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.similarity import time_horizon
+from ..obs import MetricsRegistry
 from ..kernels.sssj_join import (
     PairBuffer,
     compact_pairs,
@@ -409,11 +411,14 @@ class StreamEngineBase:
     already-copied results.
     """
 
-    def __init__(self, cfg: EngineConfig) -> None:
+    def __init__(
+        self, cfg: EngineConfig, registry: Optional[MetricsRegistry] = None
+    ) -> None:
         # cfg invariants are enforced by EngineConfig.__post_init__
         self.cfg = cfg
         self._next_uid = 0
-        # futures of host-materialized (bufs, masks, nvs, nbytes) records
+        # futures of host-materialized (bufs, masks, nvs, nbytes, t_done,
+        # fetch_s) records
         self._pending: List[concurrent.futures.Future] = []
         self._copier = concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="sssj-drain"
@@ -423,6 +428,11 @@ class StreamEngineBase:
         # moved vs what the compacted path actually moves)
         self.bytes_to_host = 0
         self.bytes_dense_equiv = 0
+        # unified observability surface (DESIGN.md §12): engine counters
+        # publish under engine/… at snapshot time; stats() is a
+        # compatibility view over the same snapshot
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.registry.register_collector(self._publish_metrics)
 
     def _global_capacity(self) -> int:
         return self.cfg.capacity
@@ -457,19 +467,32 @@ class StreamEngineBase:
 
     @staticmethod
     def _fetch(bufs: PairBuffer, masks, nvs: np.ndarray):
-        """Worker-thread D2H: materialize one push's device outputs."""
+        """Worker-thread D2H: materialize one push's device outputs.
+
+        Stamps ``t_done`` (monotonic) when the copy lands — the moment
+        this batch's pairs become host-visible, which is what
+        admission→emission latency measures — plus the copy duration for
+        the ``drain`` pipeline span.
+        """
+        t0 = time.monotonic()
         host = jax.tree.map(np.asarray, bufs)
         masks = np.asarray(masks)
         nbytes = sum(x.nbytes for x in host) + masks.nbytes
-        return host, masks, nvs, nbytes
+        t_done = time.monotonic()
+        return host, masks, nvs, nbytes, t_done, t_done - t0
 
     # ------------------------------------------------------------------ #
+    def _observe_emission(self, t_done: float, fetch_s: float) -> None:
+        """Per-record drain hook (admission→emission latency attribution
+        in the multi-tenant runtime); records arrive in dispatch order."""
+
     def _drain(self):
         recs = [f.result() for f in self._pending]
         self._pending.clear()
         ua_all, ub_all, sc_all, mk_all = [], [], [], []
-        for bufs, masks, nvs, nbytes in recs:
+        for bufs, masks, nvs, nbytes, t_done, fetch_s in recs:
             self.bytes_to_host += nbytes
+            self._observe_emission(t_done, fetch_s)
             n = np.asarray(bufs.n_pairs)
             n = n.reshape(n.shape[0], -1)             # (n_micro, n_segments)
             n_micro, n_seg = n.shape
@@ -549,24 +572,57 @@ class StreamEngineBase:
         arr = np.asarray(lo)
         return arr.reshape(-1, arr.shape[-1]).sum(axis=0)
 
-    def stats(self) -> dict:
+    def _publish_metrics(self, reg: MetricsRegistry) -> None:
+        """Snapshot-time collector: engine counters under ``engine/…``,
+        per-victim-stream overflow under ``tenant/<k>/…`` (DESIGN.md §12).
+        Device telemetry is summed here exactly as the legacy ``stats()``
+        did, so registry and legacy values are the same numbers."""
         t = jax.tree.map(lambda x: int(np.asarray(x).sum()), self.telem)
-        out = {
-            "n_items": self.n_items,
-            "chunks_executed": t.chunks,
-            "tiles_total": t.tiles,
-            "pairs_emitted": t.pairs,
-            "pairs_dropped": t.dropped + t.dropped_tile,
-            "pairs_dropped_budget": t.dropped,
-            "pairs_dropped_tile": t.dropped_tile,
-            "window_overflow": self.overflow,
-            "bytes_to_host": self.bytes_to_host,
-            "bytes_dense_equiv": self.bytes_dense_equiv,
-        }
+        c = reg.counter
+        c("engine/n_items").set(self.n_items)
+        c("engine/chunks_executed").set(t.chunks)
+        c("engine/tiles_total").set(t.tiles)
+        c("engine/pairs_emitted").set(t.pairs)
+        c("engine/pairs_dropped").set(t.dropped + t.dropped_tile)
+        c("engine/pairs_dropped_budget").set(t.dropped)
+        c("engine/pairs_dropped_tile").set(t.dropped_tile)
+        c("engine/window_overflow").set(self.overflow)
+        c("engine/bytes_to_host").set(self.bytes_to_host)
+        c("engine/bytes_dense_equiv").set(self.bytes_dense_equiv)
         by_tenant = self.overflow_by_tenant
         if by_tenant is not None:
-            out["window_overflow_by_tenant"] = by_tenant.tolist()
+            for k, v in enumerate(by_tenant.tolist()):
+                c(f"tenant/{k}/window_overflow").set(int(v))
+
+    @staticmethod
+    def _legacy_engine_view(snap: dict) -> dict:
+        """The pre-registry ``stats()`` key vocabulary, derived from a
+        registry snapshot (the compatibility view, DESIGN.md §12)."""
+        out = {
+            "n_items": snap["engine/n_items"],
+            "chunks_executed": snap["engine/chunks_executed"],
+            "tiles_total": snap["engine/tiles_total"],
+            "pairs_emitted": snap["engine/pairs_emitted"],
+            "pairs_dropped": snap["engine/pairs_dropped"],
+            "pairs_dropped_budget": snap["engine/pairs_dropped_budget"],
+            "pairs_dropped_tile": snap["engine/pairs_dropped_tile"],
+            "window_overflow": snap["engine/window_overflow"],
+            "bytes_to_host": snap["engine/bytes_to_host"],
+            "bytes_dense_equiv": snap["engine/bytes_dense_equiv"],
+        }
+        by_tenant = []
+        while f"tenant/{len(by_tenant)}/window_overflow" in snap:
+            by_tenant.append(snap[f"tenant/{len(by_tenant)}/window_overflow"])
+        if by_tenant:
+            out["window_overflow_by_tenant"] = by_tenant
         return out
+
+    def metrics(self) -> dict:
+        """The namespaced registry snapshot (the primary stats surface)."""
+        return self.registry.snapshot()
+
+    def stats(self) -> dict:
+        return self._legacy_engine_view(self.registry.snapshot())
 
 
 class StreamEngine(StreamEngineBase):

@@ -60,6 +60,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..distributed.sharding import AxisRules, DEFAULT_RULES, shard_map
 from ..kernels.sssj_join import PairBuffer, PairCandidates, merge_candidates
+from ..obs import merge_disjoint, publish_flat
 from .engine import (
     EngineConfig,
     EngineTelemetry,
@@ -73,7 +74,9 @@ __all__ = [
     "ShardedStreamEngine",
     "init_sharded_window",
     "make_sharded_batch_step",
+    "shard_metrics",
     "shard_stats",
+    "shard_view",
     "window_axis",
 ]
 
@@ -325,11 +328,19 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
     return jax.jit(batch_step, donate_argnums=(0,))
 
 
-def shard_stats(state: WindowState, telem: EngineTelemetry, n_shards: int) -> dict:
-    """Per-shard liveness and drop surface, keyed like the single-device
-    :meth:`~repro.engine.engine.StreamEngineBase.stats` counters so
-    operators (and the multi-tenant runtime) read one vocabulary on both
-    paths instead of silently missing the per-shard breakdown.
+_SHARD_FIELDS = (
+    "live_slots", "cursor", "window_overflow",
+    "pairs_emitted", "pairs_dropped_budget", "pairs_dropped_tile",
+)
+
+
+def shard_metrics(
+    state: WindowState, telem: EngineTelemetry, n_shards: int
+) -> dict:
+    """Per-shard liveness and drop counters as a flat namespaced dict
+    (``engine/shard/<i>/…``, DESIGN.md §12) — the registry form; the
+    nested legacy view (:func:`shard_stats`) is derived from it, so both
+    surfaces are the same numbers by construction.
 
     Telemetry lanes ``0..n_shards-1`` are the in-scan per-shard counters;
     lane ``n_shards`` holds the global-merge correction (see
@@ -341,20 +352,43 @@ def shard_stats(state: WindowState, telem: EngineTelemetry, n_shards: int) -> di
     uids = np.asarray(state.uids).reshape(n, -1)
     pairs = np.asarray(telem.pairs).reshape(-1)
     dropped = np.asarray(telem.dropped).reshape(-1)
+    dropped_tile = np.asarray(telem.dropped_tile).reshape(-1)
+    lanes = {
+        "live_slots": (uids >= 0).sum(axis=1),
+        "cursor": np.asarray(state.cursor).reshape(-1),
+        "window_overflow": np.asarray(state.overflow).reshape(-1),
+        "pairs_emitted": pairs[:n],
+        "pairs_dropped_budget": dropped[:n],
+        "pairs_dropped_tile": dropped_tile[:n],
+    }
+    out = {
+        "engine/n_shards": n,
+        "engine/pairs_dropped_global": int(dropped[n:].sum()),
+    }
+    for i in range(n):
+        for f in _SHARD_FIELDS:
+            out[f"engine/shard/{i}/{f}"] = int(lanes[f][i])
+    return out
+
+
+def shard_view(flat: dict) -> dict:
+    """The nested legacy per-shard stats vocabulary, rebuilt from a flat
+    metrics dict / registry snapshot containing ``engine/shard/<i>/…``."""
+    n = int(flat["engine/n_shards"])
     return {
         "n_shards": n,
-        "pairs_dropped_global": int(dropped[n:].sum()),
+        "pairs_dropped_global": flat["engine/pairs_dropped_global"],
         "shards": {
-            "live_slots": (uids >= 0).sum(axis=1).tolist(),
-            "cursor": np.asarray(state.cursor).reshape(-1).tolist(),
-            "window_overflow": np.asarray(state.overflow).reshape(-1).tolist(),
-            "pairs_emitted": pairs[:n].tolist(),
-            "pairs_dropped_budget": dropped[:n].tolist(),
-            "pairs_dropped_tile": (
-                np.asarray(telem.dropped_tile).reshape(-1)[:n].tolist()
-            ),
+            f: [flat[f"engine/shard/{i}/{f}"] for i in range(n)]
+            for f in _SHARD_FIELDS
         },
     }
+
+
+def shard_stats(state: WindowState, telem: EngineTelemetry, n_shards: int) -> dict:
+    """Nested per-shard stats (the legacy surface) — a view over
+    :func:`shard_metrics`."""
+    return shard_view(shard_metrics(state, telem, n_shards))
 
 
 class ShardedStreamEngine(StreamEngineBase):
@@ -389,8 +423,12 @@ class ShardedStreamEngine(StreamEngineBase):
     def _global_capacity(self) -> int:
         return self.cfg.capacity * self.n_shards
 
+    def _publish_metrics(self, reg) -> None:
+        super()._publish_metrics(reg)
+        publish_flat(
+            reg, shard_metrics(self.state, self.telem, self.n_shards)
+        )
+
     def stats(self) -> dict:
-        return {
-            **super().stats(),
-            **shard_stats(self.state, self.telem, self.n_shards),
-        }
+        snap = self.registry.snapshot()
+        return merge_disjoint(self._legacy_engine_view(snap), shard_view(snap))

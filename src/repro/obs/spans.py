@@ -1,0 +1,88 @@
+"""Pipeline span tracing: per-stage wall time for the serving path.
+
+The serving pipeline is a fixed sequence of host-side stages —
+``admit → coalesce → h2d → scan → drain → emit`` (DESIGN.md §12) — and
+each stage's wall time accumulates into the shared
+:class:`~repro.obs.registry.MetricsRegistry` under ``span/<stage>/time_s``
+(a float counter) and ``span/<stage>/calls``, so a snapshot attributes
+the host budget stage by stage.
+
+Timing uses :func:`time.monotonic`.  Two caveats the keys are named
+around:
+
+  * ``scan`` measures the *dispatch* of the jitted step, not device
+    execution — jax dispatch is asynchronous, so device time hides
+    inside whichever later stage first blocks on the result (normally
+    ``drain``, the copy-thread D2H materialization, recorded via
+    :meth:`SpanTracer.record` with a duration measured on that thread);
+  * for real device-side attribution, wrap a region in
+    :meth:`SpanTracer.jax_trace` — a guarded hook around
+    ``jax.profiler`` trace capture that degrades to a no-op when the
+    profiler is unavailable (e.g. headless CI without tensorboard).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Iterator, Tuple
+
+from .registry import MetricsRegistry
+
+__all__ = ["PIPELINE_STAGES", "SpanTracer"]
+
+# canonical serving-pipeline stage names, in pipeline order
+PIPELINE_STAGES: Tuple[str, ...] = (
+    "admit", "coalesce", "h2d", "scan", "drain", "emit",
+)
+
+
+class SpanTracer:
+    """Accumulate per-stage wall time into a metrics registry."""
+
+    def __init__(self, registry: MetricsRegistry, prefix: str = "span") -> None:
+        self.registry = registry
+        self.prefix = prefix
+
+    def record(self, stage: str, seconds: float) -> None:
+        """Record one completed span measured elsewhere (e.g. on the
+        drain copy thread, whose duration is stamped by the worker)."""
+        p = f"{self.prefix}/{stage}"
+        self.registry.counter(f"{p}/calls").inc(1)
+        self.registry.counter(f"{p}/time_s").inc(float(seconds))
+
+    @contextlib.contextmanager
+    def span(self, stage: str) -> Iterator[None]:
+        """Time a pipeline stage: ``with tracer.span("coalesce"): …``."""
+        t0 = time.monotonic()
+        try:
+            yield
+        finally:
+            self.record(stage, time.monotonic() - t0)
+
+    @contextlib.contextmanager
+    def jax_trace(self, logdir: str) -> Iterator[bool]:
+        """Capture a ``jax.profiler`` trace of the wrapped region into
+        ``logdir`` (viewable in TensorBoard/Perfetto).  Yields whether
+        capture actually started; degrades to a no-op — never an error —
+        when the profiler backend is unavailable, so callers can leave
+        the hook in place unconditionally."""
+        started = False
+        try:
+            import jax
+
+            jax.profiler.start_trace(logdir)
+            started = True
+        except Exception:
+            started = False
+        try:
+            yield started
+        finally:
+            if started:
+                with contextlib.suppress(Exception):
+                    import jax
+
+                    jax.profiler.stop_trace()
+            self.registry.counter(f"{self.prefix}/jax_traces").inc(
+                1 if started else 0
+            )

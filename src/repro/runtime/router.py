@@ -105,12 +105,15 @@ class RequestRouter:
 
     def take(
         self, n: int
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Pop exactly ``n`` rows (``n ≤ len(self)``) in admission order.
 
-        Returns ``(payload (n, ...), ts (n,), uids (n,), sids (n,))``.
-        A partially-consumed head chunk stays queued with its cursor
-        advanced, so micro-batch boundaries never reorder or drop rows.
+        Returns ``(payload (n, ...), ts (n,), uids (n,), sids (n,),
+        t_admit (n,))`` — ``t_admit`` is each row's monotonic admission
+        stamp, the anchor for admission→emission latency attribution
+        (DESIGN.md §12).  A partially-consumed head chunk stays queued
+        with its cursor advanced, so micro-batch boundaries never reorder
+        or drop rows.
         """
         if n > self._queued_rows:
             raise ValueError(f"take({n}) exceeds {self._queued_rows} queued rows")
@@ -140,4 +143,7 @@ class RequestRouter:
         sids = np.concatenate(
             [np.full(hi - lo, c.tenant, np.int32) for c, lo, hi in parts]
         )
-        return payload, ts, uids, sids
+        t_admit = np.concatenate(
+            [np.full(hi - lo, c.t_admit, np.float64) for c, lo, hi in parts]
+        )
+        return payload, ts, uids, sids, t_admit

@@ -38,7 +38,8 @@ boundaries, flush timing, and span size (tested property-style in
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from collections import deque
+from typing import Any, Deque, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +56,12 @@ from ..distributed.sharding import DEFAULT_RULES
 from ..engine.sharded import (
     init_sharded_window,
     make_sharded_batch_step,
-    shard_stats,
+    shard_metrics,
+    shard_view,
     window_axis,
 )
 from ..engine.window import init_window, push_with_overflow
+from ..obs import SpanTracer, merge_disjoint, publish_flat
 from .router import RequestRouter, TenantBackpressure
 from .tenants import TenantTable
 
@@ -109,8 +112,9 @@ class EngineFacade:
         bufs, masks)``;
       * **drain** — :meth:`global_capacity` sizes the dense-equivalent
         traffic accounting the drain reports;
-      * **stats** — :meth:`stats_extra` surfaces engine-specific counters
-        (e.g. per-shard liveness) under the same keys both engines use.
+      * **stats** — :meth:`metrics_extra` surfaces engine-specific
+        counters (e.g. per-shard liveness) as a flat namespaced dict the
+        runtime publishes into the shared registry (DESIGN.md §12).
     """
 
     def init_state(self, cfg: EngineConfig, table: TenantTable):
@@ -130,7 +134,7 @@ class EngineFacade:
     def global_capacity(self, cfg: EngineConfig) -> int:
         raise NotImplementedError
 
-    def stats_extra(self, state, telem) -> dict:
+    def metrics_extra(self, state, telem) -> dict:
         return {}
 
 
@@ -153,9 +157,6 @@ class SingleDeviceFacade(EngineFacade):
 
     def global_capacity(self, cfg: EngineConfig) -> int:
         return cfg.capacity
-
-    def stats_extra(self, state, telem) -> dict:
-        return {}
 
 
 class ShardedFacade(EngineFacade):
@@ -195,8 +196,8 @@ class ShardedFacade(EngineFacade):
     def global_capacity(self, cfg: EngineConfig) -> int:
         return cfg.capacity * self.n_shards
 
-    def stats_extra(self, state, telem) -> dict:
-        return shard_stats(state, telem, self.n_shards)
+    def metrics_extra(self, state, telem) -> dict:
+        return shard_metrics(state, telem, self.n_shards)
 
 
 def make_tenant_batch_step(
@@ -315,6 +316,20 @@ class MultiTenantRuntime(StreamEngineBase):
         self.state = self.engine.init_state(cfg, table)
         self.telem = self.engine.init_telemetry(cfg)
         self._step = self.engine.make_step(cfg, table, fused)
+        # observability (DESIGN.md §12): the engine registry (created by
+        # StreamEngineBase.__init__) is the single stats surface — the
+        # runtime adds router/tenant collectors, pipeline spans, and
+        # admission→emission latency histograms to the same instance
+        self.tracer = SpanTracer(self.registry)
+        self._lat_hist = self.registry.histogram("latency/admit_to_emit_s")
+        self._lat_by_tenant = [
+            self.registry.histogram(f"tenant/{t}/latency_s")
+            for t in range(table.n_tenants)
+        ]
+        # (sids, t_admit) per dispatch, FIFO — drained records arrive in
+        # dispatch order (single copy worker), so attribution zips exactly
+        self._dispatch_meta: Deque[Tuple[np.ndarray, np.ndarray]] = deque()
+        self.registry.register_collector(self._publish_runtime_metrics)
         # uid → tenant map: a doubling-growth append buffer (4 B per item
         # ever admitted — see ROADMAP on tenant-aware state)
         self._uid_tenant_buf = np.empty((1024,), np.int32)
@@ -369,7 +384,8 @@ class MultiTenantRuntime(StreamEngineBase):
         if b == 0:
             return np.empty((0,), np.int32)
         uids = np.arange(self._next_uid, self._next_uid + b, dtype=np.int32)
-        self.router.admit(tenant, data, ts, uids)   # may raise; all-or-nothing
+        with self.tracer.span("admit"):
+            self.router.admit(tenant, data, ts, uids)  # all-or-nothing
         self._next_uid += b
         n = self._uid_tenant_n
         if n + b > self._uid_tenant_buf.size:
@@ -383,7 +399,7 @@ class MultiTenantRuntime(StreamEngineBase):
         return uids
 
     # ------------------------------------------------------------------ #
-    def _dispatch(self, payload, ts, uids, sids) -> None:
+    def _dispatch(self, payload, ts, uids, sids, t_admit) -> None:
         """Pack one span of micro-batches and launch the device step."""
         cfg = self.cfg
         mb, span = cfg.micro_batch, self.span
@@ -392,37 +408,44 @@ class MultiTenantRuntime(StreamEngineBase):
         assert n <= rows
         n_real = -(-n // mb)                     # micro-batches with any data
         pad = rows - n
-        if self.fused is not None:
-            pl = np.zeros((rows, self.fused.seq_len), np.int32)
-        else:
-            pl = np.zeros((rows, cfg.d), np.float32)
-        pl[:n] = payload
-        tq = np.full(rows, _EMPTY_T, np.float32)  # inert: every strip dead
-        tq[:n] = ts
-        if n and n_real * mb > n:
-            # partial tail micro-batch: repeat its last valid timestamp so
-            # the strip filter's extremes stay honest (pad_request contract)
-            tq[n:n_real * mb] = ts[-1]
-        uq = np.full(rows, -1, np.int32)
-        uq[:n] = uids
-        sq = np.full(rows, -1, np.int32)
-        sq[:n] = sids
-        nvs = np.clip(n - mb * np.arange(span), 0, mb).astype(np.int32)
+        with self.tracer.span("coalesce"):
+            if self.fused is not None:
+                pl = np.zeros((rows, self.fused.seq_len), np.int32)
+            else:
+                pl = np.zeros((rows, cfg.d), np.float32)
+            pl[:n] = payload
+            tq = np.full(rows, _EMPTY_T, np.float32)  # inert: all strips dead
+            tq[:n] = ts
+            if n and n_real * mb > n:
+                # partial tail micro-batch: repeat its last valid timestamp
+                # so the strip filter's extremes stay honest (pad_request
+                # contract)
+                tq[n:n_real * mb] = ts[-1]
+            uq = np.full(rows, -1, np.int32)
+            uq[:n] = uids
+            sq = np.full(rows, -1, np.int32)
+            sq[:n] = sids
+            nvs = np.clip(n - mb * np.arange(span), 0, mb).astype(np.int32)
 
-        args = (
-            jnp.asarray(pl.reshape(span, mb, -1)),
-            jnp.asarray(tq.reshape(span, mb)),
-            jnp.asarray(uq.reshape(span, mb)),
-            jnp.asarray(sq.reshape(span, mb)),
-        )
-        if self.fused is not None:
-            self.state, self.telem, bufs, masks = self._step(
-                self.fused.params, self.state, self.telem, *args, nvs
+        with self.tracer.span("h2d"):
+            args = (
+                jnp.asarray(pl.reshape(span, mb, -1)),
+                jnp.asarray(tq.reshape(span, mb)),
+                jnp.asarray(uq.reshape(span, mb)),
+                jnp.asarray(sq.reshape(span, mb)),
             )
-        else:
-            self.state, self.telem, bufs, masks = self._step(
-                self.state, self.telem, *args, nvs
-            )
+        with self.tracer.span("scan"):
+            # dispatch time only — jax executes asynchronously; device wall
+            # time hides in the drain span (see repro.obs.spans)
+            if self.fused is not None:
+                self.state, self.telem, bufs, masks = self._step(
+                    self.fused.params, self.state, self.telem, *args, nvs
+                )
+            else:
+                self.state, self.telem, bufs, masks = self._step(
+                    self.state, self.telem, *args, nvs
+                )
+        self._dispatch_meta.append((sids, t_admit))
         self._pending.append(self._copier.submit(self._fetch, bufs, masks, nvs))
         self.n_items += n
         # padding waste = inert rows inside *real* micro-batches (they ride
@@ -485,6 +508,12 @@ class MultiTenantRuntime(StreamEngineBase):
         attribution uses ``uid_a``'s stream — the join's stream-equality
         mask guarantees ``uid_b`` agrees.
         """
+        with self.tracer.span("emit"):
+            return self._drain_by_tenant(return_masks)
+
+    def _drain_by_tenant(
+        self, return_masks: bool = False
+    ) -> Dict[int, Tuple[np.ndarray, ...]]:
         ua, ub, sc, mask = self.drain_arrays(return_masks=True)
         mask_uids = np.arange(
             self._mask_uid0 - mask.shape[0], self._mask_uid0, dtype=np.int64
@@ -544,21 +573,67 @@ class MultiTenantRuntime(StreamEngineBase):
     def _global_capacity(self) -> int:
         return self.engine.global_capacity(self.cfg)
 
-    def stats(self) -> dict:
+    # ------------------------------------------------------------------ #
+    def _observe_emission(self, t_done: float, fetch_s: float) -> None:
+        """Attribute one drained record's admission→emission latency.
+
+        Records leave :meth:`_drain` in dispatch order (single copy
+        worker, FIFO futures) and ``push()`` is disabled, so each record
+        pairs with exactly one ``(sids, t_admit)`` entry queued by
+        :meth:`_dispatch`.
+        """
+        self.tracer.record("drain", fetch_s)
+        if not self._dispatch_meta:     # pragma: no cover - defensive
+            return
+        sids, t_admit = self._dispatch_meta.popleft()
+        lat = np.maximum(t_done - t_admit, 0.0)
+        self._lat_hist.observe_many(lat)
+        for t in np.unique(sids):
+            self._lat_by_tenant[int(t)].observe_many(lat[sids == t])
+
+    def _publish_runtime_metrics(self, reg) -> None:
+        """Snapshot-time collector: router/runtime/per-tenant counters
+        under the namespaced schema (DESIGN.md §12), alongside the engine
+        collector registered by :class:`StreamEngineBase`."""
         rt = self.router.telemetry
-        disp = max(rt.items_dispatched, 1)
-        return {
-            **super().stats(),
-            **self.engine.stats_extra(self.state, self.telem),
-            "eviction": self.cfg.eviction,
-            "n_tenants": self.table.n_tenants,
-            "items_queued": len(self.router),
-            "items_rejected": rt.items_rejected,
-            "spans_dispatched": self.spans_dispatched,
-            "padded_rows": self.padded_rows,
-            "empty_micro_batches": self.empty_micro_batches,
-            "padding_waste": self.padded_rows
-            / max(self.padded_rows + rt.items_dispatched, 1),
-            "queue_delay_mean_s": rt.queue_delay_sum_s / disp,
-            "queue_delay_max_s": rt.queue_delay_max_s,
+        c, g = reg.counter, reg.gauge
+        c("router/items_admitted").set(rt.items_admitted)
+        c("router/items_rejected").set(rt.items_rejected)
+        c("router/items_dispatched").set(rt.items_dispatched)
+        c("router/queue_delay_sum_s").set(rt.queue_delay_sum_s)
+        g("router/queue_delay_max_s").set(rt.queue_delay_max_s)
+        g("router/items_queued").set(len(self.router))
+        reg.info("runtime/eviction").set(self.cfg.eviction)
+        g("runtime/n_tenants").set(self.table.n_tenants)
+        c("runtime/spans_dispatched").set(self.spans_dispatched)
+        c("runtime/padded_rows").set(self.padded_rows)
+        c("runtime/empty_micro_batches").set(self.empty_micro_batches)
+        for t in range(self.table.n_tenants):
+            c(f"tenant/{t}/submitted").set(self.submitted_by_tenant[t])
+            g(f"tenant/{t}/queued").set(self.router.queued_by_tenant[t])
+            c(f"tenant/{t}/pairs_drained").set(self.pairs_by_tenant[t])
+        publish_flat(reg, self.engine.metrics_extra(self.state, self.telem))
+
+    def stats(self) -> dict:
+        """Legacy flat stats — a compatibility view derived from one
+        registry snapshot, so every value equals its namespaced metric."""
+        snap = self.registry.snapshot()
+        disp = snap["router/items_dispatched"]
+        padded = snap["runtime/padded_rows"]
+        runtime_view = {
+            "eviction": snap["runtime/eviction"],
+            "n_tenants": snap["runtime/n_tenants"],
+            "items_queued": snap["router/items_queued"],
+            "items_rejected": snap["router/items_rejected"],
+            "spans_dispatched": snap["runtime/spans_dispatched"],
+            "padded_rows": padded,
+            "empty_micro_batches": snap["runtime/empty_micro_batches"],
+            "padding_waste": padded / max(padded + disp, 1),
+            "queue_delay_mean_s": snap["router/queue_delay_sum_s"]
+            / max(disp, 1),
+            "queue_delay_max_s": snap["router/queue_delay_max_s"],
         }
+        shard = shard_view(snap) if "engine/n_shards" in snap else {}
+        return merge_disjoint(
+            self._legacy_engine_view(snap), shard, runtime_view
+        )

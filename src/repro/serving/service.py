@@ -169,6 +169,20 @@ class SSSJService:
         application (a burst of mutually-similar items within the horizon)."""
         return [g for g in self.duplicate_groups() if len(g) >= min_size]
 
+    # -- observability (DESIGN.md §12) --------------------------------- #
+    @property
+    def registry(self):
+        """The engine's :class:`~repro.obs.MetricsRegistry`."""
+        return self.engine.registry
+
+    def snapshot(self) -> dict:
+        """One coherent namespaced metrics snapshot (``engine/…``)."""
+        return self.engine.registry.snapshot()
+
+    def prometheus_text(self) -> str:
+        """The same snapshot in Prometheus text exposition format."""
+        return self.engine.registry.prometheus_text()
+
 
 class MultiTenantSSSJService:
     """Near-duplicate / trend service over K coalesced logical streams.
@@ -361,3 +375,20 @@ class MultiTenantSSSJService:
 
     def stats(self) -> dict:
         return self.runtime.stats()
+
+    # -- observability (DESIGN.md §12) --------------------------------- #
+    @property
+    def registry(self):
+        """The shared :class:`~repro.obs.MetricsRegistry` — engine,
+        router, per-tenant, span, and latency metrics in one instance."""
+        return self.runtime.registry
+
+    def snapshot(self) -> dict:
+        """One coherent namespaced metrics snapshot (``engine/…``,
+        ``router/…``, ``runtime/…``, ``span/…``, ``tenant/<k>/…``,
+        ``latency/…``)."""
+        return self.runtime.registry.snapshot()
+
+    def prometheus_text(self) -> str:
+        """The same snapshot in Prometheus text exposition format."""
+        return self.runtime.registry.prometheus_text()

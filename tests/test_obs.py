@@ -1,0 +1,396 @@
+"""Unified observability layer (DESIGN.md §12): registry semantics,
+histogram bucket exactness, exposition round-trips, span tracing,
+registry↔legacy-stats conformance across engine cells, per-tenant
+admission→emission latency attribution, and the pinned metrics schema."""
+
+import json
+import math
+import os
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Counters
+from repro.engine import EngineConfig, StreamEngine, ShardedStreamEngine
+from repro.data.synth import dense_embedding_stream
+from repro.obs import (
+    LATENCY_BOUNDS_S,
+    Histogram,
+    MetricsRegistry,
+    PIPELINE_STAGES,
+    SpanTracer,
+    histogram_percentile,
+    log_buckets,
+    merge_disjoint,
+    publish_counters,
+)
+from repro.runtime import MultiTenantRuntime, ShardedFacade, TenantTable
+from repro.serving import MultiTenantSSSJService
+
+SCHEMA_PATH = os.path.join(os.path.dirname(__file__), "metrics_schema.json")
+
+K, D = 4, 32
+
+
+def _cfg(**kw):
+    base = dict(theta=0.8, lam=0.05, capacity=256, d=D, micro_batch=16,
+                max_pairs=1024, block_q=16, block_w=16, chunk_d=32)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _mt_runtime(shards: int = 1, **kw):
+    table = TenantTable.uniform(K, 0.8, 0.05)
+    engine = None
+    if shards > 1:
+        engine = ShardedFacade(jax.make_mesh((shards,), ("data",)))
+    return MultiTenantRuntime(_cfg(**kw), table, span=2, engine=engine)
+
+
+def _drive(rt, n_per=24, seed0=50):
+    """Submit K interleaved streams, flush, and drain; returns per-tenant
+    submitted counts."""
+    streams = [
+        dense_embedding_stream(n_per, D, seed=seed0 + k, rate=1.0)
+        for k in range(K)
+    ]
+    events = sorted(
+        (float(streams[k][1][i]), k, i)
+        for k in range(K) for i in range(n_per)
+    )
+    for _, k, i in events:
+        v, t = streams[k]
+        rt.submit(k, v[i:i + 1], t[i:i + 1])
+    rt.flush(final=True)
+    rt.drain_by_tenant()
+    return {k: n_per for k in range(K)}
+
+
+# --------------------------------------------------------------------- #
+# histogram bucket-boundary exactness (satellite: exposition primitives)
+# --------------------------------------------------------------------- #
+def test_log_buckets_exact_boundaries():
+    b = log_buckets(1e-5, 64.0, 2.0)
+    assert b[0] == 1e-5
+    for lo, hi in zip(b, b[1:]):
+        assert hi == lo * 2.0          # exact repeated multiplication
+    assert b[-2] < 64.0 <= b[-1]
+    assert LATENCY_BOUNDS_S == b
+
+
+def test_log_buckets_rejects_degenerate():
+    for lo, hi, g in [(0.0, 1.0, 2.0), (1.0, 1.0, 2.0), (1e-3, 1.0, 1.0)]:
+        with pytest.raises(ValueError):
+            log_buckets(lo, hi, g)
+
+
+def test_histogram_le_semantics_at_boundaries():
+    h = Histogram("t", bounds=(1.0, 2.0, 4.0))
+    # a value exactly at a bound lands in the bucket it upper-bounds
+    for v, bucket in [(0.5, 0), (1.0, 0), (1.0000001, 1), (2.0, 1),
+                      (4.0, 2), (4.0001, 3)]:
+        before = list(h.counts)
+        h.observe(v)
+        delta = [b - a for a, b in zip(before, h.counts)]
+        assert delta == [int(i == bucket) for i in range(4)], v
+
+
+def test_observe_many_matches_observe():
+    vals = np.array([0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 9.0, 1.0])
+    h1 = Histogram("a", bounds=(1.0, 2.0, 4.0))
+    h2 = Histogram("b", bounds=(1.0, 2.0, 4.0))
+    for v in vals:
+        h1.observe(float(v))
+    h2.observe_many(vals)
+    assert h1.counts == h2.counts
+    assert h1.count == h2.count == vals.size
+    assert math.isclose(h1.sum, h2.sum)
+
+
+def test_histogram_percentile_interpolation():
+    h = Histogram("t", bounds=(1.0, 2.0, 4.0))
+    assert h.percentile(0.5) == 0.0                    # empty
+    h.observe_many(np.full(100, 1.5))                  # all in (1, 2]
+    assert 1.0 < h.percentile(0.5) <= 2.0
+    assert h.percentile(1.0) == 2.0                    # bucket upper edge
+    h2 = Histogram("o", bounds=(1.0,))
+    h2.observe(50.0)                                   # overflow bucket
+    assert h2.percentile(0.99) == 1.0                  # last finite bound
+    with pytest.raises(ValueError):
+        h2.percentile(1.5)
+
+
+def test_percentile_from_snapshot_dict():
+    h = Histogram("t")
+    h.observe_many(np.array([1e-4] * 90 + [1.0] * 10))
+    snap = h.read()
+    assert json.loads(json.dumps(snap)) == snap        # JSON round-trip
+    assert math.isclose(
+        histogram_percentile(snap, 0.5), h.percentile(0.5)
+    )
+
+
+# --------------------------------------------------------------------- #
+# registry semantics
+# --------------------------------------------------------------------- #
+def test_registry_get_or_create_and_kind_guard():
+    reg = MetricsRegistry()
+    c = reg.counter("x/total")
+    c.inc(3)
+    assert reg.counter("x/total") is c                 # idempotent getter
+    with pytest.raises(TypeError):
+        reg.gauge("x/total")                           # kind change = break
+    reg.histogram("x/lat")
+    with pytest.raises(ValueError):
+        reg.histogram("x/lat", bounds=(1.0, 2.0))      # bounds change too
+
+
+def test_merge_disjoint_raises_on_collision():
+    assert merge_disjoint({"a": 1}, {"b": 2}) == {"a": 1, "b": 2}
+    with pytest.raises(ValueError, match="pairs_emitted"):
+        merge_disjoint({"pairs_emitted": 1}, {"pairs_emitted": 2})
+
+
+def test_collector_republishes_at_snapshot_time():
+    reg = MetricsRegistry()
+    state = {"v": 1}
+    reg.register_collector(lambda r: r.counter("s/v").set(state["v"]))
+    assert reg.snapshot()["s/v"] == 1
+    state["v"] = 7                      # externally-owned total moved
+    assert reg.snapshot()["s/v"] == 7   # snapshot is coherent, not stale
+
+
+def test_snapshot_json_and_prometheus_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("engine/pairs_emitted").inc(5)
+    reg.gauge("router/items_queued").set(3)
+    reg.info("runtime/eviction").set("quota")
+    reg.histogram("latency/admit_to_emit_s").observe_many(
+        np.array([1e-4, 2e-3, 0.5])
+    )
+    snap = json.loads(reg.to_json())
+    assert snap["engine/pairs_emitted"] == 5
+    assert snap["latency/admit_to_emit_s"]["count"] == 3
+    text = reg.prometheus_text()
+    assert "# TYPE engine_pairs_emitted counter" in text
+    assert "engine_pairs_emitted 5" in text.splitlines()
+    assert 'runtime_eviction{value="quota"} 1' in text
+    # histogram series are cumulative and end at the +Inf bucket == count
+    buckets = re.findall(
+        r'latency_admit_to_emit_s_bucket\{le="([^"]+)"\} (\d+)', text
+    )
+    counts = [int(c) for _, c in buckets]
+    assert counts == sorted(counts) and buckets[-1][0] == "+Inf"
+    assert counts[-1] == 3
+    assert "latency_admit_to_emit_s_count 3" in text
+
+
+def test_publish_counters_bridges_paper_vocabulary():
+    reg = MetricsRegistry()
+    c = Counters()
+    publish_counters(reg, c)
+    c.entries_traversed += 11
+    c.full_sims_computed += 4
+    c.peak_index_entries = 9
+    snap = reg.snapshot()
+    assert snap["paper/entries_traversed"] == 11
+    assert snap["paper/full_sims_computed"] == 4
+    assert snap["paper/peak_index_entries"] == 9
+    sch = reg.schema()
+    assert sch["paper/entries_traversed"] == "counter"
+    assert sch["paper/peak_index_entries"] == "gauge"   # maxima are gauges
+
+
+# --------------------------------------------------------------------- #
+# span tracer
+# --------------------------------------------------------------------- #
+def test_span_tracer_records_stage_timings():
+    reg = MetricsRegistry()
+    tr = SpanTracer(reg)
+    with tr.span("scan"):
+        pass
+    tr.record("drain", 0.25)
+    snap = reg.snapshot()
+    assert snap["span/scan/calls"] == 1
+    assert snap["span/scan/time_s"] >= 0.0
+    assert snap["span/drain/calls"] == 1
+    assert math.isclose(snap["span/drain/time_s"], 0.25)
+    assert set(PIPELINE_STAGES) == {
+        "admit", "coalesce", "h2d", "scan", "drain", "emit"
+    }
+
+
+def test_jax_trace_hook_degrades_to_noop(tmp_path):
+    reg = MetricsRegistry()
+    tr = SpanTracer(reg)
+    with tr.jax_trace(str(tmp_path / "trace")) as started:
+        assert started in (True, False)     # never raises either way
+    assert reg.snapshot().get("span/jax_traces", 0) in (0, 1)
+
+
+# --------------------------------------------------------------------- #
+# conformance: registry values == legacy stats() across engine cells
+# --------------------------------------------------------------------- #
+_ENGINE_KEYS = {
+    "n_items": "engine/n_items",
+    "chunks_executed": "engine/chunks_executed",
+    "tiles_total": "engine/tiles_total",
+    "pairs_emitted": "engine/pairs_emitted",
+    "pairs_dropped": "engine/pairs_dropped",
+    "pairs_dropped_budget": "engine/pairs_dropped_budget",
+    "pairs_dropped_tile": "engine/pairs_dropped_tile",
+    "window_overflow": "engine/window_overflow",
+    "bytes_to_host": "engine/bytes_to_host",
+    "bytes_dense_equiv": "engine/bytes_dense_equiv",
+}
+
+
+def _assert_registry_matches_stats(obj, stats):
+    snap = obj.metrics()
+    for legacy, namespaced in _ENGINE_KEYS.items():
+        assert snap[namespaced] == stats[legacy], legacy
+
+
+def test_single_engine_registry_equals_stats():
+    eng = StreamEngine(_cfg())
+    vecs, ts = dense_embedding_stream(96, D, seed=1, rate=2.0)
+    for i in range(0, 96, 16):
+        eng.push(vecs[i:i + 16], ts[i:i + 16])
+    ua, _, _ = eng.drain_arrays()
+    stats = eng.stats()
+    _assert_registry_matches_stats(eng, stats)
+    assert stats["n_items"] == 96
+    assert stats["pairs_emitted"] == ua.size
+    assert eng.metrics()["engine/pairs_emitted"] == ua.size
+
+
+@pytest.mark.skipif(jax.device_count() < 2, reason="needs ≥ 2 devices")
+def test_sharded_engine_registry_equals_stats():
+    mesh = jax.make_mesh((2,), ("data",))
+    eng = ShardedStreamEngine(_cfg(capacity=128), mesh)
+    vecs, ts = dense_embedding_stream(64, D, seed=2, rate=2.0)
+    for i in range(0, 64, 16):
+        eng.push(vecs[i:i + 16], ts[i:i + 16])
+    eng.drain_arrays()
+    stats = eng.stats()
+    _assert_registry_matches_stats(eng, stats)
+    snap = eng.metrics()
+    assert snap["engine/n_shards"] == stats["n_shards"] == 2
+    for i in range(2):
+        for f in ("live_slots", "pairs_emitted", "window_overflow"):
+            assert snap[f"engine/shard/{i}/{f}"] == stats["shards"][f][i]
+    assert sum(
+        snap[f"engine/shard/{i}/pairs_emitted"] for i in range(2)
+    ) >= stats["pairs_emitted"] - stats["pairs_dropped"]
+
+
+@pytest.mark.parametrize("shards", [1, 2])
+def test_runtime_registry_equals_stats(shards):
+    if jax.device_count() < shards:
+        pytest.skip(f"needs ≥ {shards} devices")
+    rt = _mt_runtime(shards=shards, capacity=256 if shards == 1 else 128)
+    _drive(rt)
+    stats = rt.stats()
+    snap = rt.metrics()
+    _assert_registry_matches_stats(rt, stats)
+    assert snap["runtime/n_tenants"] == stats["n_tenants"] == K
+    assert snap["router/items_queued"] == stats["items_queued"] == 0
+    assert snap["router/items_rejected"] == stats["items_rejected"]
+    assert snap["runtime/spans_dispatched"] == stats["spans_dispatched"]
+    assert snap["runtime/padded_rows"] == stats["padded_rows"]
+    assert snap["runtime/eviction"] == stats["eviction"]
+    assert math.isclose(
+        stats["queue_delay_mean_s"],
+        snap["router/queue_delay_sum_s"]
+        / max(snap["router/items_dispatched"], 1),
+    )
+    for k in range(K):
+        ts = rt.tenant_stats(k)
+        assert snap[f"tenant/{k}/submitted"] == ts["submitted"]
+        assert snap[f"tenant/{k}/pairs_drained"] == ts["pairs_drained"]
+        assert snap[f"tenant/{k}/window_overflow"] == ts["window_overflow"]
+
+
+# --------------------------------------------------------------------- #
+# per-tenant admission→emission latency attribution
+# --------------------------------------------------------------------- #
+def test_latency_histograms_attribute_every_row():
+    rt = _mt_runtime()
+    per_tenant = _drive(rt)
+    snap = rt.metrics()
+    total = snap["latency/admit_to_emit_s"]
+    assert total["count"] == sum(per_tenant.values())
+    assert total["sum"] > 0.0
+    for k, n in per_tenant.items():
+        h = snap[f"tenant/{k}/latency_s"]
+        assert h["count"] == n, f"tenant {k}"
+        assert histogram_percentile(h, 0.5) > 0.0
+    # pipeline spans saw the dispatch path
+    assert snap["span/admit/calls"] == sum(per_tenant.values())
+    for stage in ("coalesce", "h2d", "scan", "drain"):
+        assert snap[f"span/{stage}/calls"] >= 1, stage
+    assert snap["span/emit/calls"] == 1
+
+
+# --------------------------------------------------------------------- #
+# serving facade: one snapshot, every layer
+# --------------------------------------------------------------------- #
+def test_service_snapshot_spans_all_layers():
+    table = TenantTable.uniform(K, 0.8, 0.05)
+    svc = MultiTenantSSSJService(
+        table, dim=D, capacity=256, micro_batch=16, max_pairs=1024, span=2
+    )
+    rng = np.random.default_rng(0)
+    for k in range(K):
+        svc.submit(k, rng.normal(size=(8, D)), np.arange(8, dtype=float))
+    svc.flush(final=True)
+    snap = svc.snapshot()
+    assert svc.registry is svc.runtime.registry
+    for probe in ("engine/pairs_emitted", "router/items_admitted",
+                  "runtime/spans_dispatched", "latency/admit_to_emit_s",
+                  "tenant/0/latency_s", "span/scan/time_s"):
+        assert probe in snap, probe
+    assert snap["router/items_admitted"] == 8 * K
+    assert snap["latency/admit_to_emit_s"]["count"] == 8 * K
+    text = svc.prometheus_text()
+    assert "engine_pairs_emitted" in text
+    assert 'tenant_0_latency_s_bucket{le="+Inf"}' in text
+    # legacy dict is a view over the same snapshot
+    assert svc.stats()["n_items"] == snap["engine/n_items"]
+
+
+# --------------------------------------------------------------------- #
+# pinned schema: renaming or dropping a metric is a reviewed change
+# --------------------------------------------------------------------- #
+def normalize_schema(schema):
+    """Collapse per-tenant / per-shard indices so the pinned schema is
+    cardinality-independent."""
+    out = {}
+    for name, kind in schema.items():
+        name = re.sub(r"tenant/\d+/", "tenant/<k>/", name)
+        name = re.sub(r"engine/shard/\d+/", "engine/shard/<s>/", name)
+        prev = out.setdefault(name, kind)
+        assert prev == kind, f"{name}: {prev} vs {kind}"
+    return out
+
+
+def test_metrics_schema_matches_pinned():
+    rt = _mt_runtime()
+    _drive(rt)
+    got = normalize_schema(rt.registry.schema())
+    with open(SCHEMA_PATH) as f:
+        want = json.load(f)
+    missing = sorted(set(want) - set(got))
+    assert not missing, (
+        f"metrics dropped or renamed (update tests/metrics_schema.json "
+        f"deliberately if intended): {missing}"
+    )
+    changed = {n: (want[n], got[n]) for n in want if got[n] != want[n]}
+    assert not changed, f"metric kinds changed: {changed}"
+    extra = sorted(set(got) - set(want))
+    assert not extra, (
+        f"new metrics not in the pinned schema (add them to "
+        f"tests/metrics_schema.json): {extra}"
+    )

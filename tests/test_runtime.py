@@ -282,7 +282,7 @@ def _check_router_schedule(seed, n_tenants, cap):
     for _ in range(60):
         if shadow and rng.random() < 0.4:
             n = int(rng.integers(1, len(shadow) + 1))
-            _, ts, uids, sids = router.take(n)
+            _, ts, uids, sids, _ = router.take(n)
             want = shadow[:n]
             del shadow[:n]
             dispatched += n
