@@ -238,6 +238,19 @@ def run(fast: bool = True, smoke: bool = False) -> List[Row]:
                     f"vs PR-1 dense compaction at cap={cap_big}"))
     rows.append(Row("engine/bigcap_pair_sets_match", float(match_big)))
 
+    # ---- strip-gate skip fraction (DESIGN.md §13) -------------------------
+    # the hier drivers run gate-auto-on; a larger window holds more expired
+    # history, so the admissible skip fraction must grow with capacity
+    for label, drv, cap in (("smallcap", hier, cap_small),
+                            ("bigcap", hier_big, cap_big)):
+        m = drv.engine.metrics()
+        total = max(m["engine/prune/tiles_total"], 1)
+        skipped = (m["engine/prune/tiles_skipped_time"]
+                   + m["engine/prune/tiles_skipped_l2"])
+        rows.append(Row(f"engine/prune/{label}_skip_frac", skipped / total,
+                        f"cap={cap}, survived="
+                        f"{m['engine/prune/strips_survived']}"))
+
     # ---- compaction-stage breakdown on the identical dense workload -------
     rng = np.random.default_rng(3)
     sc = np.where(rng.random((mb, cap_big + mb)) < 2e-4,
@@ -306,6 +319,14 @@ def check(rows: List[Row]) -> List[str]:
         problems.append("paper-counters bridge published empty counters")
     if by.get("engine/hugecap/pairs_dropped", 0.0) != 0.0:
         problems.append("emission overflowed at the huge capacity")
+    small = by.get("engine/prune/smallcap_skip_frac", 0.0)
+    big = by.get("engine/prune/bigcap_skip_frac", 0.0)
+    if not 0.0 < big < 1.0:
+        problems.append(f"strip gate vacuous at big capacity ({big})")
+    if big < small - 0.02:
+        problems.append(
+            f"skip fraction not growing with capacity: {small:.3f} → {big:.3f}"
+        )
     if not by.get("engine/smoke_mode") and by.get("engine/hier_speedup_x", 0.0) < 2.0:
         problems.append(
             "hierarchical compaction under 2× vs dense at capacity "

@@ -38,6 +38,7 @@ __all__ = [
     "bursty_tenant_traffic",
     "dense_embedding_stream",
     "planted_duplicates",
+    "topic_drift_stream",
 ]
 
 
@@ -133,6 +134,48 @@ def dense_embedding_stream(
             base[i] = base[src] + dup_noise * rng.standard_normal(d)
     base /= np.linalg.norm(base, axis=1, keepdims=True)
     return base.astype(np.float32), ts.astype(np.float64)
+
+
+def topic_drift_stream(
+    n: int,
+    d: int,
+    n_topics: int = 8,
+    seg: int = 512,
+    seed: int = 0,
+    rate: float = 1.0,
+    in_spread: float = 0.25,
+    leak: float = 0.02,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Topically clustered unit-vector stream for value-bound pruning.
+
+    The stream dwells on one topic for ``seg`` consecutive items, then
+    jumps to another.  Each topic owns a disjoint block of ``d //
+    n_topics`` coordinates: in-block weights are ``|N(1, in_spread²)|``
+    and out-of-block weights ``N(0, leak²)``, so after normalization
+    cross-topic cosines sit far below any useful threshold while
+    same-topic cosines sit far above it.  This is the structure that
+    lets per-strip vmax/chunk-norm summaries prove whole window strips
+    irrelevant to a query batch — an isotropic stream defeats value
+    bounds by construction (every strip's per-dimension max is uniform).
+
+    Returns ``(vectors (n, d) f32, timestamps (n,) f64)``.
+    """
+    if d % n_topics:
+        raise ValueError(f"d={d} must be divisible by n_topics={n_topics}")
+    rng = np.random.default_rng(seed)
+    bw = d // n_topics
+    vecs = rng.normal(0.0, leak, size=(n, d))
+    topic = -1
+    for s0 in range(0, n, seg):
+        step = int(rng.integers(1, n_topics))  # never re-draw the same topic
+        topic = (topic + step) % n_topics if topic >= 0 else int(rng.integers(n_topics))
+        k = min(seg, n - s0)
+        vecs[s0 : s0 + k, topic * bw : (topic + 1) * bw] = np.abs(
+            rng.normal(1.0, in_spread, size=(k, bw))
+        )
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    ts = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return vecs.astype(np.float32), ts.astype(np.float64)
 
 
 def bursty_tenant_traffic(

@@ -99,6 +99,9 @@ class EngineConfig:
     eviction: str = "oldest"     # write-slot policy: oldest/dead/quota (§11)
     quotas: Optional[Tuple[int, ...]] = None  # per-stream slots (quota policy);
     #                                           sums to capacity (per shard)
+    l2_gate: Optional[bool] = None  # L2/prefix strip-summary gate (§13):
+    #   True = on, False = off, None = auto (on for every hierarchical
+    #   non-dense join path, where the gate can actually skip launches)
 
     def __post_init__(self) -> None:
         """Reject configurations that would only fail later as opaque shape
@@ -137,6 +140,14 @@ class EngineConfig:
                 f"join_impl must be one of None/'pallas'/'scan'/'dense', "
                 f"got {self.join_impl!r}"
             )
+        if self.l2_gate is True and (
+            self.emit_dense or self.use_ref or self.join_impl == "dense"
+        ):
+            raise ValueError(
+                "l2_gate=True requires a gated join path; the dense oracle "
+                "(emit_dense / use_ref / join_impl='dense') never consults "
+                "the gate — drop l2_gate or leave it None"
+            )
         if self.eviction not in EVICTION_POLICIES:
             raise ValueError(
                 f"eviction must be one of {EVICTION_POLICIES}, "
@@ -167,6 +178,16 @@ class EngineConfig:
     @property
     def tau(self) -> float:
         return time_horizon(self.theta, self.lam)
+
+    @property
+    def gate_enabled(self) -> bool:
+        """Whether the window state carries a strip summary and the join
+        runs the L2/prefix pre-launch gate (DESIGN.md §13)."""
+        if self.l2_gate is not None:
+            return bool(self.l2_gate)
+        return not (
+            self.emit_dense or self.use_ref or self.join_impl == "dense"
+        )
 
     @property
     def n_lanes(self) -> Optional[int]:
@@ -222,12 +243,17 @@ class EngineTelemetry(NamedTuple):
     pairs: jax.Array         # () i32 — pairs emitted (compacted, post-merge)
     dropped: jax.Array       # () i32 — pairs lost to the max_pairs budget
     dropped_tile: jax.Array  # () i32 — pairs lost to per-tile/per-shard caps
+    tiles_skipped_time: jax.Array  # () i32 — gate kills by the time bound
+    tiles_skipped_l2: jax.Array    # () i32 — gate kills by the value bounds
+    strips_survived: jax.Array     # () i32 — strips the gated walk visited
 
 
 def init_telemetry() -> EngineTelemetry:
     # distinct buffers: the step donates the whole pytree, and donating one
     # buffer twice is an error
-    return EngineTelemetry(*(jnp.zeros((), jnp.int32) for _ in range(5)))
+    return EngineTelemetry(
+        *(jnp.zeros((), jnp.int32) for _ in EngineTelemetry._fields)
+    )
 
 
 def pad_request(vecs, ts, next_uid: int, micro_batch: int):
@@ -325,6 +351,7 @@ def make_micro_step(
             uw_all = jnp.concatenate([state.uids, uq])
             buf = compact_pairs(scores, uq, uw_all, max_pairs=cfg.max_pairs)
             row_mask = jnp.any(scores > 0.0, axis=1)
+            gate_stats = jnp.zeros((3,), jnp.int32)
         else:
             # hierarchical: per-tile level-1 candidates → segmented merge;
             # no dense score matrix exists anywhere on this path
@@ -336,8 +363,12 @@ def make_micro_step(
                 self_kw = dict(sq=sq, sw=sq, theta_q=theta_q, lam_q=lam_q)
             else:
                 win_kw = self_kw = {}
+            # the window join consults the strip summary (None = ungated);
+            # the self-join never does — its strips are this micro-batch,
+            # freshly scored either way
             jw = sssj_join_candidates(
-                q, state.vecs, tq, state.ts, uq, state.uids, **ckw, **win_kw
+                q, state.vecs, tq, state.ts, uq, state.uids,
+                summary=state.summary, **ckw, **win_kw
             )
             js = sssj_join_candidates(q, q, tq, tq, uq, uq, **ckw, **self_kw)
             cs = js.cands if self_mask is None else self_mask(js.cands)
@@ -346,6 +377,10 @@ def make_micro_step(
             )
             row_mask = jw.row_mask | js.row_mask
             it_win = jw.iters
+            gate_stats = (
+                jw.gate_stats if jw.gate_stats is not None
+                else jnp.zeros((3,), jnp.int32)
+            )
 
         # newest valid arrival — the reference point for live-slot overflow
         lanes = jnp.arange(q.shape[0], dtype=jnp.int32)
@@ -360,6 +395,9 @@ def make_micro_step(
             pairs=telem.pairs + buf.n_pairs,
             dropped=telem.dropped + buf.n_dropped,
             dropped_tile=telem.dropped_tile + buf.n_dropped_tile,
+            tiles_skipped_time=telem.tiles_skipped_time + gate_stats[0],
+            tiles_skipped_l2=telem.tiles_skipped_l2 + gate_stats[1],
+            strips_survived=telem.strips_survived + gate_stats[2],
         )
         return (new_state, new_telem), (buf, row_mask)
 
@@ -382,6 +420,7 @@ def make_batch_step(cfg: EngineConfig):
         return push_with_overflow(
             state, q, tq, uq, n_valid, t_max, tau,
             eviction=cfg.eviction, quotas=quo,
+            summary_block_w=cfg.block_w, summary_chunk_d=cfg.chunk_d,
         )
 
     micro_step = make_micro_step(cfg, ingest)
@@ -589,6 +628,12 @@ class StreamEngineBase:
         c("engine/window_overflow").set(self.overflow)
         c("engine/bytes_to_host").set(self.bytes_to_host)
         c("engine/bytes_dense_equiv").set(self.bytes_dense_equiv)
+        # L2/prefix gate counters (DESIGN.md §13); tiles_total repeats the
+        # window-join tile count so skip fractions are self-contained
+        c("engine/prune/tiles_total").set(t.tiles)
+        c("engine/prune/tiles_skipped_time").set(t.tiles_skipped_time)
+        c("engine/prune/tiles_skipped_l2").set(t.tiles_skipped_l2)
+        c("engine/prune/strips_survived").set(t.strips_survived)
         by_tenant = self.overflow_by_tenant
         if by_tenant is not None:
             for k, v in enumerate(by_tenant.tolist()):
@@ -631,7 +676,9 @@ class StreamEngine(StreamEngineBase):
     def __init__(self, cfg: EngineConfig) -> None:
         super().__init__(cfg)
         self.state: WindowState = init_window(
-            cfg.capacity, cfg.d, n_lanes=cfg.n_lanes, eviction=cfg.eviction
+            cfg.capacity, cfg.d, n_lanes=cfg.n_lanes, eviction=cfg.eviction,
+            summary_block_w=cfg.block_w if cfg.gate_enabled else None,
+            summary_chunk_d=cfg.chunk_d,
         )
         self.telem = init_telemetry()
         self._step = make_batch_step(cfg)

@@ -60,6 +60,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..distributed.sharding import AxisRules, DEFAULT_RULES, shard_map
 from ..kernels.sssj_join import PairBuffer, PairCandidates, merge_candidates
+from ..kernels.sssj_join.gate import StripSummary, init_strip_summary
 from ..obs import merge_disjoint, publish_flat
 from .engine import (
     EngineConfig,
@@ -120,6 +121,25 @@ def init_sharded_window(
             else jax.device_put(jnp.zeros((n, n_lanes), jnp.int32), lane_shard)
         )
 
+    def summary():
+        if not cfg.gate_enabled:
+            return None
+        # per-shard summaries must be built at per-shard geometry: a
+        # ragged per-shard capacity (capacity % block_w != 0) pads INSIDE
+        # each shard, which a global summarize over capacity·n slots would
+        # mis-align.  Strip rows concatenate along the shard axis exactly
+        # like the ring slots they summarize.
+        s1 = init_strip_summary(
+            cfg.capacity, cfg.d, block_w=cfg.block_w, chunk_d=cfg.chunk_d
+        )
+        return jax.tree.map(
+            lambda x: jax.device_put(
+                jnp.tile(x, (n,) + (1,) * (x.ndim - 1)),
+                lane_shard if x.ndim > 1 else shard,
+            ),
+            s1,
+        )
+
     return WindowState(
         vecs=jax.device_put(state.vecs, NamedSharding(mesh, P(axis, None))),
         ts=jax.device_put(state.ts, shard),
@@ -129,6 +149,7 @@ def init_sharded_window(
         sids=jax.device_put(state.sids, shard),
         lane_cursor=lanes() if cfg.eviction == "quota" else None,
         lane_overflow=lanes(),
+        summary=summary(),
     )
 
 
@@ -179,6 +200,7 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
                 st, q[idx], tq[idx], uq[idx], n_valid_l, t_max, tau,
                 sq=None if sq is None else sq[idx],
                 eviction=cfg.eviction, quotas=quo_t,
+                summary_block_w=cfg.block_w, summary_chunk_d=cfg.chunk_d,
             )
 
         # replicated inputs ⇒ every shard computes the same self candidates;
@@ -255,6 +277,12 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
         cursor=P(axis), overflow=P(axis), sids=P(axis),
         lane_cursor=P(axis, None) if (lanes and quota) else None,
         lane_overflow=P(axis, None) if lanes else None,
+        # strip summaries shard along their strip axis, like the ring
+        # slots they summarize (each shard gates against its own window)
+        summary=StripSummary(
+            vmax=P(axis, None), cnorm=P(axis, None),
+            tmin=P(axis), tmax=P(axis), umax=P(axis),
+        ) if cfg.gate_enabled else None,
     )
     telem_specs = EngineTelemetry(*(P(axis) for _ in EngineTelemetry._fields))
     buf_specs = PairBuffer(
@@ -331,6 +359,7 @@ def make_sharded_batch_step(cfg: EngineConfig, mesh: Mesh, axis: str, table=None
 _SHARD_FIELDS = (
     "live_slots", "cursor", "window_overflow",
     "pairs_emitted", "pairs_dropped_budget", "pairs_dropped_tile",
+    "tiles_skipped_time", "tiles_skipped_l2", "strips_survived",
 )
 
 
@@ -360,6 +389,11 @@ def shard_metrics(
         "pairs_emitted": pairs[:n],
         "pairs_dropped_budget": dropped[:n],
         "pairs_dropped_tile": dropped_tile[:n],
+        # per-shard gate lanes: lane p (the global-merge correction lane)
+        # never accumulates gate counters, so [:n] loses nothing
+        "tiles_skipped_time": np.asarray(telem.tiles_skipped_time).reshape(-1)[:n],
+        "tiles_skipped_l2": np.asarray(telem.tiles_skipped_l2).reshape(-1)[:n],
+        "strips_survived": np.asarray(telem.strips_survived).reshape(-1)[:n],
     }
     out = {
         "engine/n_shards": n,

@@ -43,6 +43,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.sssj_join.gate import (
+    StripSummary,
+    init_strip_summary,
+    refresh_strip_summary,
+)
+
 __all__ = [
     "EVICTION_POLICIES",
     "WindowState",
@@ -83,6 +89,10 @@ class WindowState(NamedTuple):
     sids: Optional[jax.Array] = None  # (capacity,) i32 stream ids; -1 = empty
     lane_cursor: Optional[jax.Array] = None    # (n_lanes,) i32 sub-ring cursors
     lane_overflow: Optional[jax.Array] = None  # (n_lanes,) i32 per-victim-stream
+    summary: Optional[StripSummary] = None  # per-strip L2/prefix index
+    #   aggregates (DESIGN.md §13); maintained by push_with_overflow and
+    #   consumed by the join's pre-launch gate.  Trails with default None
+    #   like the lanes, so legacy constructions stay valid.
 
 
 def init_window(
@@ -91,9 +101,14 @@ def init_window(
     dtype=jnp.float32,
     n_lanes: Optional[int] = None,
     eviction: str = "oldest",
+    summary_block_w: Optional[int] = None,
+    summary_chunk_d: int = 128,
 ) -> WindowState:
     """Empty window.  ``n_lanes`` materializes the per-stream overflow lane
-    (and, under ``eviction="quota"``, the per-stream cursor lane)."""
+    (and, under ``eviction="quota"``, the per-stream cursor lane);
+    ``summary_block_w`` materializes the per-strip L2/prefix summary at
+    that strip granularity (pass the join's ``block_w`` so gate strips
+    line up with kernel tiles)."""
     if eviction not in EVICTION_POLICIES:
         raise ValueError(
             f"eviction must be one of {EVICTION_POLICIES}, got {eviction!r}"
@@ -112,6 +127,9 @@ def init_window(
         sids=jnp.full((capacity,), -1, jnp.int32),
         lane_cursor=lanes() if eviction == "quota" else None,
         lane_overflow=lanes(),
+        summary=None if summary_block_w is None else init_strip_summary(
+            capacity, d, block_w=summary_block_w, chunk_d=summary_chunk_d
+        ),
     )
 
 
@@ -292,6 +310,8 @@ def push_with_overflow(
     sq: Optional[jax.Array] = None,
     eviction: str = "oldest",
     quotas: Optional[jax.Array] = None,
+    summary_block_w: Optional[int] = None,
+    summary_chunk_d: Optional[int] = None,
 ) -> WindowState:
     """Policy-driven masked push that also counts live-slot overwrites.
 
@@ -302,6 +322,13 @@ def push_with_overflow(
     state carries lanes, ``lane_overflow`` charges it to the **victim**'s
     stream (under ``"quota"`` the victim is always the writer's own
     stream, which is the isolation guarantee).
+
+    When the state carries a :class:`StripSummary`, the write also
+    refreshes the summaries of every strip it touched — keyed off the
+    selected destination slots, so the maintenance is policy-agnostic
+    (an eviction under any policy updates the victim strip's aggregates).
+    ``summary_block_w``/``summary_chunk_d`` must then be the values the
+    summary was built with.
     """
     cap = state.ts.shape[0]
     b = q.shape[0]
@@ -318,6 +345,19 @@ def push_with_overflow(
     new_state = _apply_writes(
         state, dest, q, tq, uq, sq, new_cursor, new_lane
     )
+    if state.summary is not None:
+        if summary_block_w is None or summary_chunk_d is None:
+            raise ValueError(
+                "state carries a strip summary: push_with_overflow needs "
+                "summary_block_w/summary_chunk_d to refresh it"
+            )
+        new_state = new_state._replace(
+            summary=refresh_strip_summary(
+                state.summary,
+                new_state.vecs, new_state.ts, new_state.uids, dest,
+                block_w=summary_block_w, chunk_d=summary_chunk_d,
+            )
+        )
     lane_overflow = state.lane_overflow
     if lane_overflow is not None:
         n_lanes = lane_overflow.shape[0]

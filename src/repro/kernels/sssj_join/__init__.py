@@ -7,6 +7,13 @@ from .compact import (  # noqa: F401
     tile_candidates,
     tile_emit_counts,
 )
+from .gate import (  # noqa: F401
+    StripSummary,
+    init_strip_summary,
+    refresh_strip_summary,
+    strip_gate,
+    summarize_strips,
+)
 from .ops import (  # noqa: F401
     JoinCandidates,
     NEG_UID,

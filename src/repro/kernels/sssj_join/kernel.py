@@ -64,6 +64,7 @@ def _tile_scores(
     *, theta: float, lam: float, chunk_d: int, n_chunks: int,
     bq: int, bw: int,
     sid_q_ref=None, sid_w_ref=None, th_ref=None, lm_ref=None,
+    gate_ref=None,
 ):
     """Shared per-tile score computation: thresholded decayed similarities
     for one (BQ, BW) tile, with tile-level time filtering and the chunked
@@ -102,6 +103,11 @@ def _tile_scores(
 
     # --- time filtering at tile granularity (paper §3 / §6.2) ---
     tile_alive = jnp.any(decay >= th)          # dot ≤ 1 ⇒ decayed ≤ decay
+    if gate_ref is not None:
+        # pre-launch L2/prefix gate (DESIGN.md §13): the strip-summary
+        # bound already proved this tile cannot reach any row's θ, so the
+        # chunk loop never starts (k_final = 0, like a time-dead tile)
+        tile_alive &= gate_ref[0, 0] > 0
 
     def cond(state):
         k, _, live = state
@@ -153,6 +159,7 @@ def _cand_kernel(
     *refs,
     theta: float, lam: float, chunk_d: int, n_chunks: int, tile_k: int,
     multi: bool = False,
+    gated: bool = False,
 ):
     """Level-1 hierarchical compaction: select this tile's ≥ θ entries.
 
@@ -172,6 +179,10 @@ def _cand_kernel(
         refs = refs[4:]
     else:
         sid_q_ref = sid_w_ref = th_ref = lm_ref = None
+    if gated:
+        gate_ref, *refs = refs
+    else:
+        gate_ref = None
     idx_ref, score_ref, emitted_ref, rowhits_ref, iters_ref = refs
     bq = q_ref.shape[0]
     bw = w_ref.shape[0]
@@ -181,7 +192,7 @@ def _cand_kernel(
         theta=theta, lam=lam, chunk_d=chunk_d, n_chunks=n_chunks,
         bq=bq, bw=bw,
         sid_q_ref=sid_q_ref, sid_w_ref=sid_w_ref, th_ref=th_ref,
-        lm_ref=lm_ref,
+        lm_ref=lm_ref, gate_ref=gate_ref,
     )
     iters_ref[0, 0] = k_final
 
@@ -308,6 +319,7 @@ def sssj_join_candidates_kernel_call(
     sw: jax.Array = None,       # (W, 1) i32
     theta_q: jax.Array = None,  # (Q, 1) f32 per-row θ
     lam_q: jax.Array = None,    # (Q, 1) f32 per-row λ
+    gate: jax.Array = None,     # (nQ, nW) i32 pre-launch gate (0 = dead)
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Hierarchical (level-1) pallas_call; no dense ``(Q, W)`` output exists.
 
@@ -334,6 +346,7 @@ def sssj_join_candidates_kernel_call(
     kernel = functools.partial(
         _cand_kernel, theta=theta, lam=lam, chunk_d=chunk_d,
         n_chunks=n_chunks, tile_k=tile_k, multi=multi,
+        gated=gate is not None,
     )
     in_specs = _join_in_specs(block_q, block_w, d, n_chunks)
     inputs = [q, w, tq, tw, uq, uw, sqq, sqw]
@@ -345,6 +358,9 @@ def sssj_join_candidates_kernel_call(
             pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),  # lam_q
         ]
         inputs += [sq, sw, theta_q, lam_q]
+    if gate is not None:
+        in_specs += [pl.BlockSpec((1, 1), lambda i, j: (i, j))]
+        inputs += [gate]
     out_shape = [
         jax.ShapeDtypeStruct((nq, nw, tile_k), jnp.int32),
         jax.ShapeDtypeStruct((nq, nw, tile_k), jnp.float32),

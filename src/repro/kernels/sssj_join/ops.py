@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from .compact import PairCandidates, tile_candidates, tile_emit_counts
+from .gate import StripSummary, strip_gate
 from .kernel import (
     NEG_UID,
     sssj_join_candidates_kernel_call,
@@ -197,6 +198,9 @@ class JoinCandidates(NamedTuple):
     cands: PairCandidates
     row_mask: jax.Array
     iters: jax.Array
+    gate_stats: Optional[jax.Array] = None  # (3,) i32 [skipped_time,
+    #                                         skipped_l2, strips_survived];
+    #                                         zeros when no gate ran
 
 
 def _kernel_candidates(cand_idx, cand_score, emitted, uqp, uwp, block_q, block_w):
@@ -247,6 +251,7 @@ def sssj_join_candidates(
     sw: Optional[jax.Array] = None,
     theta_q: Optional[jax.Array] = None,
     lam_q: Optional[jax.Array] = None,
+    summary: Optional[StripSummary] = None,
 ) -> JoinCandidates:
     """Blocked join with hierarchical (level-1) emission — no dense matrix.
 
@@ -269,6 +274,17 @@ def sssj_join_candidates(
         stream-equality mask makes the query row's stream the pair's
         stream, so query-side values govern the pair; the static
         ``theta``/``lam`` then only seed pruning defaults.
+
+    L2/prefix gate (DESIGN.md §13): ``summary`` optionally carries the
+    window's per-strip :class:`~repro.kernels.sssj_join.gate.StripSummary`
+    (``n_strips = ceil(W / block_w)`` rows, maintained by the engine's
+    write path).  When present, an admissible pre-launch bound gates every
+    (query-tile × strip): the ``"scan"`` impl walks only surviving strips
+    (a compacted gather — interior dead strips cost nothing), and the
+    ``"pallas"`` impl folds the gate into the kernel's tile-alive predicate
+    so gated-off programs skip the chunk loop.  The ``"dense"`` oracle
+    ignores it.  Gating never changes emitted candidates — the bound
+    certifies that a skipped tile cannot reach any row's θ.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -300,6 +316,12 @@ def sssj_join_candidates(
     # row's threshold, exactly as on a single device (DESIGN.md §10)
     th_min = theta if theta_q is None else jnp.min(theta_q)
     lam_min = lam if lam_q is None else jnp.min(lam_q)
+    # time extremes for the strip filters/gate, also from the UNPADDED
+    # batch: _pad_rows fills tq with 0.0, which would pin tq_lo to 0 and
+    # disable the older-than-horizon bound for any ragged Q (padded rows
+    # carry uid = -1 and can never emit, so excluding them is sound)
+    tq_lo, tq_hi = jnp.min(tq), jnp.max(tq)
+    no_gate_stats = jnp.zeros((3,), jnp.int32)
 
     Q, d = q.shape
     W, _ = w.shape
@@ -327,7 +349,10 @@ def sssj_join_candidates(
             n_chunks,
             jnp.int32,
         )
-        return JoinCandidates(cands=cands, row_mask=row_mask, iters=iters)
+        return JoinCandidates(
+            cands=cands, row_mask=row_mask, iters=iters,
+            gate_stats=no_gate_stats,
+        )
 
     if d % chunk_d != 0:
         pad_d = (-d) % chunk_d
@@ -349,6 +374,18 @@ def sssj_join_candidates(
     Qp, Wp = qp.shape[0], wp.shape[0]
     nq, nw = Qp // block_q, Wp // block_w
 
+    # L2/prefix pre-launch gate: one (Qp, n_strips) bound evaluation —
+    # ~block_w× cheaper than scoring the strips it can kill
+    gate = None
+    gate_stats = no_gate_stats
+    if summary is not None:
+        gate, gate_stats = strip_gate(
+            qp, summary, block_q=block_q, chunk_d=chunk_d,
+            tq_lo=tq_lo, tq_hi=tq_hi, th_min=th_min, lam_min=lam_min,
+            impl="pallas" if impl == "pallas" else "jnp",
+            interpret=interpret,
+        )
+
     if impl == "pallas":
         sqq = suffix_chunk_norms(qp, chunk_d)
         sqw = suffix_chunk_norms(wp, chunk_d)
@@ -362,13 +399,17 @@ def sssj_join_candidates(
                 sw=None if swp is None else swp[:, None],
                 theta_q=None if thp is None else thp[:, None],
                 lam_q=None if lmp is None else lmp[:, None],
+                gate=None if gate is None else gate.astype(jnp.int32),
             )
         )
         cands = _kernel_candidates(
             cand_idx, cand_score, emitted, uqp, uwp, block_q, block_w
         )
         row_mask = jnp.any(row_hits > 0, axis=1).reshape(Qp)[:Q]
-        return JoinCandidates(cands=cands, row_mask=row_mask, iters=iters)
+        return JoinCandidates(
+            cands=cands, row_mask=row_mask, iters=iters,
+            gate_stats=gate_stats,
+        )
 
     if impl != "scan":
         raise ValueError(f"unknown sssj_join_candidates impl {impl!r}")
@@ -380,11 +421,6 @@ def sssj_join_candidates(
     sw_tiles = None if swp is None else swp.reshape(nw, block_w)
     qf = qp.astype(jnp.float32)
     tq2 = tqp.astype(jnp.float32)
-    # strip-filter extremes come from the UNPADDED timestamps: _pad_rows
-    # fills tq with 0.0, which would pin tq_lo to 0 and disable the
-    # older-than-horizon bound for any ragged Q (padded rows carry
-    # uid = -1 and can never emit, so excluding them is sound)
-    tq_lo, tq_hi = jnp.min(tq), jnp.max(tq)
     n_chunks = d // chunk_d
 
     def strip(s):
@@ -411,33 +447,73 @@ def sssj_join_candidates(
     # strip is dead by construction; unit vectors ⇒ dot ≤ 1 ⇒
     # score ≤ exp(-λ·Δt).  With per-row (θ, λ) the scalar bound uses
     # (min θ, min λ), which upper-bounds every row's score requirement.
-    tw_min = jnp.min(tw_tiles, axis=1)                             # (nw,)
-    tw_max = jnp.max(tw_tiles, axis=1)
     uw_max = jnp.max(uw_tiles, axis=1)
-    dt_lb = jnp.maximum(0.0, jnp.maximum(tq_lo - tw_max, tw_min - tq_hi))
-    alive = (jnp.exp(-lam_min * dt_lb) >= th_min) & (uw_max >= 0)
-    # Cursor-anchored live range (ROADMAP strip-skipping item): ring writes
-    # are sequential and uids monotone, so the newest strip is the one
-    # holding the max uid and live strips cluster within the τ-horizon just
-    # behind it.  Walking ``dist`` strips back from the newest covers every
-    # flagged-alive strip (``n_live`` is defined as exactly that cover), so
-    # the sweep costs O(live strips), not O(n_strips) — an all-dead batch
-    # runs zero strip iterations instead of n_strips `lax.cond` dispatches.
-    # Correctness never depends on the time-ordering: a strip outside the
-    # walk has ``alive = False``, i.e. it is provably below θ for every row.
     newest = jnp.argmax(uw_max).astype(jnp.int32)
     dist = (newest - jnp.arange(nw, dtype=jnp.int32)) % nw
-    n_live = jnp.max(jnp.where(alive, dist + 1, 0))
+    if gate is None:
+        tw_min = jnp.min(tw_tiles, axis=1)                         # (nw,)
+        tw_max = jnp.max(tw_tiles, axis=1)
+        dt_lb = jnp.maximum(0.0, jnp.maximum(tq_lo - tw_max, tw_min - tq_hi))
+        alive = (jnp.exp(-lam_min * dt_lb) >= th_min) & (uw_max >= 0)
+        # Cursor-anchored live range (ROADMAP strip-skipping item): ring
+        # writes are sequential and uids monotone, so the newest strip is
+        # the one holding the max uid and live strips cluster within the
+        # τ-horizon just behind it.  Walking ``dist`` strips back from the
+        # newest covers every flagged-alive strip (``n_live`` is defined as
+        # exactly that cover), so the sweep costs O(live strips), not
+        # O(n_strips) — an all-dead batch runs zero strip iterations
+        # instead of n_strips `lax.cond` dispatches.  Correctness never
+        # depends on the time-ordering: a strip outside the walk has
+        # ``alive = False``, i.e. it is provably below θ for every row.
+        alive_walk = alive
+        iters = jnp.broadcast_to(
+            jnp.where(alive, n_chunks, 0)[None, :], (nq, nw)
+        ).astype(jnp.int32)
+    else:
+        # Gated walk: the L2/prefix gate subsumes the raw time filter
+        # (its live-masked time extremes are at least as tight) and adds
+        # the value bounds, at (q-tile × strip) granularity.  A strip is
+        # scored iff ANY query tile admits it.  The walk itself keeps the
+        # exact cursor-anchored shape of the ungated branch — do NOT
+        # "optimize" this into an argsort-compacted visit list with a
+        # ``sum(alive)`` trip count: under ``shard_map`` (check_vma=False)
+        # that graph shape miscompiles, silently replicating one shard's
+        # walk onto the others (pairs vanish; caught by the sharded quota
+        # conformance cells).  Gate-killed strips inside the live range
+        # are skipped by the ``lax.cond`` in ``body`` instead — their
+        # matmul never runs, they cost one branch dispatch.
+        alive_walk = jnp.any(gate, axis=0)                         # (nw,)
+        iters = jnp.where(gate, n_chunks, 0).astype(jnp.int32)
+
+    # Cursor-anchored live range (ROADMAP strip-skipping item): ring
+    # writes are sequential and uids monotone, so the newest strip is
+    # the one holding the max uid and live strips cluster within the
+    # τ-horizon just behind it.  Walking ``dist`` strips back from the
+    # newest covers every flagged-alive strip (``n_live`` is defined as
+    # exactly that cover), so the sweep costs O(live strips), not
+    # O(n_strips) — an all-dead batch runs zero strip iterations.
+    # Correctness never depends on the time-ordering: a strip outside
+    # the walk has ``alive_walk = False``, i.e. it is provably below θ
+    # for every row.
+    n_live = jnp.max(jnp.where(alive_walk, dist + 1, 0))
 
     def body(i, acc):
-        cands_acc, mask_acc = acc
-        s = (newest - i) % nw
-        cands_t, rm = strip(s)
-        cands_acc = jax.tree.map(
-            lambda a, x: jax.lax.dynamic_update_index_in_dim(a, x, s, 0),
-            cands_acc, cands_t,
-        )
-        return cands_acc, mask_acc | rm
+        s = (newest - i) % nw                    # walk newest-first
+
+        def score(acc):
+            cands_acc, mask_acc = acc
+            cands_t, rm = strip(s)
+            cands_acc = jax.tree.map(
+                lambda a, x: jax.lax.dynamic_update_index_in_dim(a, x, s, 0),
+                cands_acc, cands_t,
+            )
+            return cands_acc, mask_acc | rm
+
+        if gate is None:
+            # interior dead strips are rare on the sequential ring — a
+            # branch per strip costs more than the occasional wasted score
+            return score(acc)
+        return jax.lax.cond(alive_walk[s], score, lambda a: a, acc)
 
     zeros_seg = jnp.zeros((nw, nq), jnp.int32)
     cands0 = PairCandidates(
@@ -458,10 +534,10 @@ def sssj_join_candidates(
 
     cands = jax.tree.map(reorder, col_cands)
     row_mask = any_mask[:Q]
-    # pruning telemetry at the same granularity as the kernel's: dead
-    # strips execute zero d-chunks (the strip bound is coarser than the
-    # kernel's per-pair decay max, so this may overcount live tiles)
-    iters = jnp.broadcast_to(
-        jnp.where(alive, n_chunks, 0)[None, :], (nq, nw)
-    ).astype(jnp.int32)
-    return JoinCandidates(cands=cands, row_mask=row_mask, iters=iters)
+    # ``iters`` (set above per walk flavor) keeps the kernel's telemetry
+    # granularity: dead strips/tiles execute zero d-chunks (the strip
+    # bound is coarser than the kernel's per-pair decay max, so this may
+    # overcount live tiles)
+    return JoinCandidates(
+        cands=cands, row_mask=row_mask, iters=iters, gate_stats=gate_stats
+    )

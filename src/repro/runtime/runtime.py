@@ -147,6 +147,8 @@ class SingleDeviceFacade(EngineFacade):
         return init_window(
             cfg.capacity, cfg.d, n_lanes=table.n_tenants,
             eviction=cfg.eviction,
+            summary_block_w=cfg.block_w if cfg.gate_enabled else None,
+            summary_chunk_d=cfg.chunk_d,
         )
 
     def init_telemetry(self, cfg: EngineConfig):
@@ -221,6 +223,7 @@ def make_tenant_batch_step(
         return push_with_overflow(
             state, q, tq, uq, n_valid, t_max, tau, sq=sq,
             eviction=cfg.eviction, quotas=quo,
+            summary_block_w=cfg.block_w, summary_chunk_d=cfg.chunk_d,
         )
 
     if fused is None:

@@ -1,83 +1,101 @@
 """Admissibility invariants: every pruning bound must upper-bound the true
 (decayed) similarity it gates — the property that guarantees zero false
-negatives (DESIGN.md §8 item 3)."""
+negatives (DESIGN.md §8 item 3, §13 for the device strip gate).
+
+Hypothesis-driven when the optional dependency is present, fixed seed
+sweeps otherwise (same pattern as ``test_window_policy.py``)."""
 
 import math
 
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)"
-)
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:  # optional dev dependency: richer search when present, fixed sweep not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.index_l2 import L2FamilyIndex
 from repro.core.similarity import decayed_similarity, time_horizon
 from repro.core.types import StreamItem, make_sparse, sparse_dot, unit_normalize
 
+DIMS = 16
 
-@st.composite
-def _vec(draw, dims=16):
-    nnz = draw(st.integers(1, 6))
-    idx = draw(st.lists(st.integers(0, dims - 1), min_size=nnz, max_size=nnz,
-                        unique=True))
-    vals = draw(st.lists(st.floats(0.05, 1.0), min_size=nnz, max_size=nnz))
+
+def _np_vec(rng, dims=DIMS):
+    nnz = int(rng.integers(1, 7))
+    idx = rng.choice(dims, size=nnz, replace=False)
+    vals = rng.random(nnz) * 0.95 + 0.05
     return unit_normalize(make_sparse(idx, vals))
 
 
-@given(st.lists(_vec(), min_size=2, max_size=20),
-       st.sampled_from([0.5, 0.7, 0.9]))
-@settings(max_examples=40, deadline=None)
-def test_pscore_bounds_prefix_similarity(vecs, theta):
-    """Q[x] (pscore at the indexing boundary) must be ≥ dot(y, x') for every
-    later query y — the CV ps1 bound builds on it (Alg. 4 line 3)."""
-    index = L2FamilyIndex(theta, 0.0, use_ap=False, use_l2=True)
-    items = [StreamItem(i, float(i), v) for i, v in enumerate(vecs)]
-    index.construct(items)
-    for uid, res in index.R.items():
-        prefix = make_sparse(res.indices, res.values)
-        for item in items:
-            if item.uid == uid:
-                continue
-            d = sparse_dot(item.vec, prefix)
-            # ‖x'‖ bound: dot(y, x') ≤ ‖x'‖·‖y‖ = ‖x'‖; pscore stores the
-            # tighter min(b1, b2) just before the boundary
-            assert d <= res.q_pscore + 1e-9 or d < theta, (uid, d, res.q_pscore)
+def _np_vecs(seed, n_lo, n_hi, dims=DIMS):
+    rng = np.random.default_rng(seed)
+    return [_np_vec(rng, dims) for _ in range(int(rng.integers(n_lo, n_hi)))]
 
 
-@given(_vec(), _vec(), st.sampled_from([0.25, 1.0]),
-       st.floats(0.0, 5.0))
-@settings(max_examples=60, deadline=None)
-def test_l2_suffix_bound_admissible(x, y, lam, dt):
-    """Cauchy–Schwarz on any split point: partial + ‖x_suffix‖·‖y_suffix‖
-    must upper-bound the full dot product (the kernel's chunked bound)."""
-    dims = 16
-    xd = np.zeros(dims)
-    xd[x.indices] = x.values
-    yd = np.zeros(dims)
-    yd[y.indices] = y.values
-    full = float(xd @ yd)
-    for split in (0, 4, 8, 12, 16):
-        partial = float(xd[:split] @ yd[:split])
-        bound = partial + float(
-            np.linalg.norm(xd[split:]) * np.linalg.norm(yd[split:])
-        )
-        assert bound >= full - 1e-9
-        dec = decayed_similarity(full, dt, lam)
-        assert bound * math.exp(-lam * dt) >= dec - 1e-9
+if HAVE_HYPOTHESIS:
 
+    @st.composite
+    def _vec(draw, dims=DIMS):
+        nnz = draw(st.integers(1, 6))
+        idx = draw(st.lists(st.integers(0, dims - 1), min_size=nnz,
+                            max_size=nnz, unique=True))
+        vals = draw(st.lists(st.floats(0.05, 1.0), min_size=nnz,
+                             max_size=nnz))
+        return unit_normalize(make_sparse(idx, vals))
 
-@given(st.floats(0.05, 0.99), st.floats(0.001, 2.0))
-@settings(max_examples=50, deadline=None)
-def test_horizon_is_tight(theta, lam):
-    """Just inside the horizon a perfect-similarity pair survives; just
-    outside it cannot (the time-filtering theorem, paper §3)."""
-    tau = time_horizon(theta, lam)
-    inside = decayed_similarity(1.0, tau * 0.999, lam)
-    outside = decayed_similarity(1.0, tau * 1.001, lam)
-    assert inside >= theta * 0.99
-    assert outside < theta + 1e-12
+    @given(st.lists(_vec(), min_size=2, max_size=20),
+           st.sampled_from([0.5, 0.7, 0.9]))
+    @settings(max_examples=40, deadline=None)
+    def test_pscore_bounds_prefix_similarity(vecs, theta):
+        """Q[x] (pscore at the indexing boundary) must be ≥ dot(y, x') for
+        every later query y — the CV ps1 bound builds on it (Alg. 4 line 3)."""
+        index = L2FamilyIndex(theta, 0.0, use_ap=False, use_l2=True)
+        items = [StreamItem(i, float(i), v) for i, v in enumerate(vecs)]
+        index.construct(items)
+        for uid, res in index.R.items():
+            prefix = make_sparse(res.indices, res.values)
+            for item in items:
+                if item.uid == uid:
+                    continue
+                d = sparse_dot(item.vec, prefix)
+                # ‖x'‖ bound: dot(y, x') ≤ ‖x'‖·‖y‖ = ‖x'‖; pscore stores
+                # the tighter min(b1, b2) just before the boundary
+                assert d <= res.q_pscore + 1e-9 or d < theta, (
+                    uid, d, res.q_pscore)
+
+    @given(_vec(), _vec(), st.sampled_from([0.25, 1.0]),
+           st.floats(0.0, 5.0))
+    @settings(max_examples=60, deadline=None)
+    def test_l2_suffix_bound_admissible(x, y, lam, dt):
+        """Cauchy–Schwarz on any split point: partial + ‖x_suffix‖·‖y_suffix‖
+        must upper-bound the full dot product (the kernel's chunked bound)."""
+        xd = np.zeros(DIMS)
+        xd[x.indices] = x.values
+        yd = np.zeros(DIMS)
+        yd[y.indices] = y.values
+        full = float(xd @ yd)
+        for split in (0, 4, 8, 12, 16):
+            partial = float(xd[:split] @ yd[:split])
+            bound = partial + float(
+                np.linalg.norm(xd[split:]) * np.linalg.norm(yd[split:])
+            )
+            assert bound >= full - 1e-9
+            dec = decayed_similarity(full, dt, lam)
+            assert bound * math.exp(-lam * dt) >= dec - 1e-9
+
+    @given(st.floats(0.05, 0.99), st.floats(0.001, 2.0))
+    @settings(max_examples=50, deadline=None)
+    def test_horizon_is_tight(theta, lam):
+        """Just inside the horizon a perfect-similarity pair survives; just
+        outside it cannot (the time-filtering theorem, paper §3)."""
+        tau = time_horizon(theta, lam)
+        inside = decayed_similarity(1.0, tau * 0.999, lam)
+        outside = decayed_similarity(1.0, tau * 1.001, lam)
+        assert inside >= theta * 0.99
+        assert outside < theta + 1e-12
 
 
 def test_decayed_max_vector_exact():
@@ -108,3 +126,111 @@ def test_decayed_max_vector_exact():
                     )
             got = dm.value_at(j, t)
             assert abs(got - want) < 1e-9, (j, got, want)
+
+
+# --------------------------------------------------------------------- #
+# Device-resident strip gate (DESIGN.md §13) vs the host L2 bound chain
+# --------------------------------------------------------------------- #
+
+def _densify(vec, dims=DIMS):
+    out = np.zeros(dims, np.float32)
+    out[vec.indices] = vec.values
+    return out
+
+
+def _chunked_cs(qd, yd, chunk):
+    qs = qd.reshape(-1, chunk)
+    ys = yd.reshape(-1, chunk)
+    return float(
+        np.sum(np.linalg.norm(qs, axis=1) * np.linalg.norm(ys, axis=1))
+    )
+
+
+def _check_strip_bounds_sandwich(vecs):
+    """On the same vectors: true dot ≤ per-row chunk-CS bound ≤ host
+    whole-vector CS bound, and the device strip bound min(prefix, chunk-ℓ2)
+    dominates every live row's dot — the device gate is never tighter than
+    the host L2 bound implies (shared admissibility oracle)."""
+    import jax.numpy as jnp
+    from repro.kernels.sssj_join import summarize_strips
+
+    chunk, bw = 4, 4
+    dense = np.stack([_densify(v) for v in vecs])
+    n = dense.shape[0]
+    ts = jnp.arange(n, dtype=jnp.float32)
+    uids = jnp.arange(n, dtype=jnp.int32)
+    summary = summarize_strips(
+        jnp.asarray(dense), ts, uids, block_w=bw, chunk_d=chunk
+    )
+    vmax = np.asarray(summary.vmax)
+    cnorm = np.asarray(summary.cnorm)
+    for qi in range(n):
+        qd = dense[qi]
+        qcn = np.linalg.norm(qd.reshape(-1, chunk), axis=1)
+        for wi in range(n):
+            yd = dense[wi]
+            true = float(qd @ yd)
+            row_cs = _chunked_cs(qd, yd, chunk)
+            host_cs = float(np.linalg.norm(qd) * np.linalg.norm(yd))
+            assert true <= row_cs + 1e-6 <= host_cs + 2e-6
+            s = wi // bw
+            prefix_b = float(np.abs(qd) @ vmax[s])
+            l2_b = float(qcn @ cnorm[s])
+            assert min(prefix_b, l2_b) >= true - 1e-6, (qi, wi)
+            # strip chunk-ℓ2 bound can only loosen the row's own chunk-CS
+            assert l2_b >= row_cs - 1e-6
+
+
+def _check_gate_keeps_host_pairs(vecs):
+    """Every pair the host L2FamilyIndex (rs2/l2 bound chain) emits must
+    survive the device strip gate at the same θ — gating off a host-emitted
+    pair would be an inadmissible (false-negative) prune."""
+    import jax.numpy as jnp
+    from repro.kernels.sssj_join import strip_gate, summarize_strips
+
+    theta, chunk, bw = 0.3, 4, 4
+    items = [StreamItem(i, float(i), v) for i, v in enumerate(vecs)]
+    index = L2FamilyIndex(theta, 0.0, use_ap=False, use_l2=True)
+    pairs = index.construct(items)
+    dense = np.stack([_densify(v) for v in vecs])
+    n = dense.shape[0]
+    ts = jnp.arange(n, dtype=jnp.float32)
+    uids = jnp.arange(n, dtype=jnp.int32)
+    summary = summarize_strips(
+        jnp.asarray(dense), ts, uids, block_w=bw, chunk_d=chunk
+    )
+    gate, _ = strip_gate(
+        jnp.asarray(dense), summary, block_q=1, chunk_d=chunk,
+        tq_lo=jnp.float32(0.0), tq_hi=jnp.float32(n),
+        th_min=jnp.float32(theta), lam_min=jnp.float32(0.0),
+    )
+    gate = np.asarray(gate)
+    for p in pairs:
+        q, w = max(p.uid_a, p.uid_b), min(p.uid_a, p.uid_b)
+        assert gate[q, w // bw], (q, w, p.sim)
+    return len(pairs)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_device_strip_bounds_sandwich(seed):
+    _check_strip_bounds_sandwich(_np_vecs(seed, 4, 21))
+
+
+def test_gate_keeps_every_host_emitted_pair():
+    emitted = 0
+    for seed in range(10):
+        emitted += _check_gate_keeps_host_pairs(_np_vecs(100 + seed, 6, 21))
+    assert emitted > 0  # non-vacuous: the host actually emitted pairs
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.lists(_vec(), min_size=4, max_size=20))
+    @settings(max_examples=25, deadline=None)
+    def test_device_strip_bounds_sandwich_property(vecs):
+        _check_strip_bounds_sandwich(vecs)
+
+    @given(st.lists(_vec(), min_size=6, max_size=20))
+    @settings(max_examples=20, deadline=None)
+    def test_gate_keeps_every_host_emitted_pair_property(vecs):
+        _check_gate_keeps_host_pairs(vecs)

@@ -2,7 +2,8 @@
 
 One parametrized grid — engine ∈ {single, sharded×{2,4}} × level-1 impl ∈
 {pallas, scan, dense} × tenants ∈ {None, K=8} × ring {wrapped, unwrapped}
-× emission {lossless, overflow} × eviction policy {oldest, dead, quota} —
+× emission {lossless, overflow} × eviction policy {oldest, dead, quota}
+× strip index {off, l2gate} (DESIGN.md §13; "dense" pairs only with off) —
 asserting the one contract every current and future engine variant must
 satisfy (DESIGN.md §8/§10/§11):
 
@@ -75,6 +76,7 @@ MODES = [
 def _cfg(
     impl: str, cap_total: int, overflow: bool, shards: int,
     eviction: str = "oldest", n_streams: int = 1,
+    l2_gate=None,
 ) -> EngineConfig:
     quotas = None
     if eviction == "quota":
@@ -85,7 +87,7 @@ def _cfg(
         micro_batch=MB, max_pairs=2 if overflow else 4096,
         tile_k=MB * MB,            # block² — level 1 is lossless by design
         block_q=MB, block_w=MB, chunk_d=32, join_impl=impl,
-        eviction=eviction, quotas=quotas,
+        eviction=eviction, quotas=quotas, l2_gate=l2_gate,
     )
 
 
@@ -169,16 +171,24 @@ def _mesh(shards: int):
 
 
 def run_cell(
-    impl: str, tenants, shards: int, mode: str, eviction: str = "oldest"
+    impl: str, tenants, shards: int, mode: str, eviction: str = "oldest",
+    gate: str = "auto",
 ) -> None:
-    """One conformance cell; raises AssertionError on contract violation."""
-    label = (impl, tenants, shards, mode, eviction)
+    """One conformance cell; raises AssertionError on contract violation.
+
+    ``gate`` is the strip-index axis (DESIGN.md §13): ``"off"`` disables
+    the device-resident L2/prefix gate, ``"l2gate"`` force-enables it
+    (only meaningful for the hierarchical impls — ``dense`` cells must
+    use ``"off"``/``"auto"``, the config rejects a forced gate there),
+    ``"auto"`` keeps the config default (on for hierarchical paths)."""
+    label = (impl, tenants, shards, mode, eviction, gate)
     cap_total, overflow = next(
         (c, o) for m, c, o in MODES if m == mode
     )
     cfg = _cfg(
         impl, cap_total, overflow, shards, eviction,
         n_streams=K if tenants else 1,
+        l2_gate={"auto": None, "off": False, "l2gate": True}[gate],
     )
     if tenants is None:
         vecs, ts = _dup_stream(N_SINGLE, seed=29, dup_frac=0.4)
@@ -229,18 +239,22 @@ def run_cell(
         assert sum(stats["shards"]["window_overflow"]) == 0
 
 
-def run_cells(impl: str, tenants, shards: int, eviction: str = "oldest") -> None:
+def run_cells(
+    impl: str, tenants, shards: int, eviction: str = "oldest",
+    gate: str = "auto",
+) -> None:
     for mode, _, _ in MODES:
-        run_cell(impl, tenants, shards, mode, eviction)
+        run_cell(impl, tenants, shards, mode, eviction, gate)
 
 
 def _subprocess_cells(
-    impl: str, tenants, shards: int, eviction: str = "oldest"
+    impl: str, tenants, shards: int, eviction: str = "oldest",
+    gate: str = "auto",
 ) -> None:
     code = (
         f"import sys; sys.path.insert(0, {_TESTS!r})\n"
         f"from test_conformance import run_cells\n"
-        f"run_cells({impl!r}, {tenants!r}, {shards}, {eviction!r})\n"
+        f"run_cells({impl!r}, {tenants!r}, {shards}, {eviction!r}, {gate!r})\n"
     )
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -254,13 +268,22 @@ def _subprocess_cells(
 
 IMPLS = ["pallas", "scan", "dense"]
 TENANTS = [None, K]
+# strip-index axis (DESIGN.md §13): "l2gate" force-enables the gate on the
+# hierarchical impls; "dense" has no tile launch to gate, so it only pairs
+# with "off" (the config rejects l2_gate=True on a dense-oracle path)
+IMPL_GATES = [
+    ("pallas", "off"), ("pallas", "l2gate"),
+    ("scan", "off"), ("scan", "l2gate"),
+    ("dense", "off"),
+]
+_IG_IDS = [f"{i}-{g}" for i, g in IMPL_GATES]
 
 
 @pytest.mark.parametrize("mode", [m for m, _, _ in MODES])
 @pytest.mark.parametrize("tenants", TENANTS, ids=["single-stream", f"K{K}"])
-@pytest.mark.parametrize("impl", IMPLS)
-def test_conformance_single_device(impl, tenants, mode):
-    run_cell(impl, tenants, 1, mode)
+@pytest.mark.parametrize("impl,gate", IMPL_GATES, ids=_IG_IDS)
+def test_conformance_single_device(impl, gate, tenants, mode):
+    run_cell(impl, tenants, 1, mode, gate=gate)
 
 
 @pytest.mark.parametrize("tenants", TENANTS, ids=["single-stream", f"K{K}"])
@@ -287,12 +310,14 @@ EVICTIONS = ["dead", "quota"]          # "oldest" is every cell above
 
 @pytest.mark.parametrize("eviction", EVICTIONS)
 @pytest.mark.parametrize("tenants", TENANTS, ids=["single-stream", f"K{K}"])
-@pytest.mark.parametrize("impl", IMPLS)
-def test_conformance_eviction_policies(impl, tenants, eviction):
+@pytest.mark.parametrize("impl,gate", IMPL_GATES, ids=_IG_IDS)
+def test_conformance_eviction_policies(impl, gate, tenants, eviction):
     """The wrapped ring is where policies actually differ — the write
     path reuses/partitions slots — yet with zero overflow every policy
-    must emit the identical oracle pair set."""
-    run_cell(impl, tenants, 1, "wrapped", eviction)
+    must emit the identical oracle pair set.  The gate axis rides along:
+    every eviction policy must refresh the victim strip's summary, so a
+    stale-summary bug would surface here as a missing pair."""
+    run_cell(impl, tenants, 1, "wrapped", eviction, gate=gate)
 
 
 @pytest.mark.parametrize("eviction", EVICTIONS)
@@ -311,6 +336,20 @@ def test_conformance_eviction_sharded(eviction):
         run_cells("scan", K, 2, eviction)
     else:
         _subprocess_cells("scan", K, 2, eviction)
+
+
+@pytest.mark.parametrize("gate", ["off", "l2gate"])
+def test_conformance_sharded_gate_axis(gate):
+    """The sharded default is gate-auto-on (every sharded cell above
+    already runs gated); this pins the explicit endpoints — forced-on
+    (per-shard summaries under the nested StripSummary P-specs) and
+    forced-off — to the same oracle."""
+    import jax
+
+    if jax.device_count() >= 2:
+        run_cells("scan", K, 2, gate=gate)
+    else:
+        _subprocess_cells("scan", K, 2, gate=gate)
 
 
 def test_oldest_ring_byte_identical_to_prerefactor():
